@@ -1,0 +1,50 @@
+"""Quickstart: federated mutual learning across 3 LLM clients in ~a minute.
+
+Three clients (reduced qwen3-4b geometry) each train on a private synthetic
+domain; every step they also descend Eq. 1 on a shared public batch —
+sharing only logits, never weights.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import distributed as D
+from repro.data.synthetic import make_token_stream
+from repro.optim import AdamWConfig
+
+K, B, S, STEPS = 3, 2, 48, 15
+
+cfg = get_reduced("qwen3-4b")
+print(f"model: {cfg.name} (reduced: {cfg.n_layers}L d={cfg.d_model}) "
+      f"x {K} clients")
+
+params = D.stacked_init(jax.random.PRNGKey(0), cfg, K)
+opt = D.stacked_adamw_init(params)
+step = jax.jit(D.make_dml_train_step(
+    cfg, AdamWConfig(lr=3e-3, warmup=3, total_steps=STEPS), kl_weight=2.0))
+
+for i in range(STEPS):
+    # each client has its own domain (non-IID); the public batch is fresh
+    # every round ("dynamically changing test dataset", paper SIII.A)
+    private = jnp.stack([
+        jnp.asarray(make_token_stream(B, S, cfg.vocab_size,
+                                      seed=100 * i + d, domain=d))
+        for d in range(K)])
+    public = jnp.asarray(make_token_stream(B, S, cfg.vocab_size,
+                                           seed=7000 + i, domain=K))
+    params, opt, m = step(params, opt, private, public)
+    if i % 3 == 0 or i == STEPS - 1:
+        print(f"step {i:3d}  private={np.mean(m['private_loss']):.4f}  "
+              f"public_ce={np.mean(m['public_ce']):.4f}  "
+              f"kld_avg={np.mean(m['kld_avg']):.5f}")
+
+# the bandwidth story (paper's central claim), at this exact setup:
+n_params = cfg.param_count()
+logit_bytes = 2 * K * B * S * cfg.vocab_size * 4
+weight_bytes = 2 * K * n_params * 4
+print(f"\nper-round sharing: DML={logit_bytes / 1e6:.2f} MB "
+      f"vs FedAvg={weight_bytes / 1e6:.2f} MB "
+      f"({weight_bytes / logit_bytes:.0f}x less traffic)")

@@ -1,0 +1,2 @@
+"""Post-dry-run analysis: roofline terms, bottleneck attribution."""
+from repro.analysis import roofline  # noqa: F401

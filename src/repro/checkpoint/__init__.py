@@ -1,0 +1,88 @@
+"""Flat-npz pytree checkpointing with JSON metadata (no orbax dependency).
+
+``save(path, tree, meta)`` / ``restore(path)`` round-trip any pytree of
+arrays; tree structure is recorded as '/'-joined key paths.  Works for
+params, optimizer state, and client-stacked federated state alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _restore_lists(tree)
+
+
+def _restore_lists(node):
+    """npz keys lose list-ness; restore dicts whose keys are 0..n-1 as lists."""
+    if not isinstance(node, dict):
+        return node
+    node = {k: _restore_lists(v) for k, v in node.items()}
+    keys = list(node)
+    if keys and all(k.isdigit() for k in keys):
+        order = sorted(keys, key=int)
+        if [int(k) for k in order] == list(range(len(order))):
+            return [node[k] for k in order]
+    return node
+
+
+# npz cannot store ml_dtypes (bfloat16 etc.); view them as a same-width
+# integer type and record the true dtype in the JSON sidecar.
+_VIEW_FOR_BITS = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+_NATIVE = {"f", "i", "u", "b", "c"}
+
+
+def save(path: str, tree, meta: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    dtypes = {}
+    store = {}
+    for k, v in flat.items():
+        if v.dtype.kind not in _NATIVE:
+            dtypes[k] = str(v.dtype)
+            v = v.view(_VIEW_FOR_BITS[v.dtype.itemsize])
+        store[k] = v
+    np.savez(path if path.endswith(".npz") else path + ".npz", **store)
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    with open(meta_path, "w") as f:
+        json.dump({"meta": meta or {}, "_dtypes": dtypes}, f, indent=2,
+                  default=str)
+
+
+def restore(path: str) -> Tuple[Any, dict]:
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    with np.load(npz_path) as data:
+        flat = {k: data[k] for k in data.files}
+    meta, dtypes = {}, {}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            doc = json.load(f)
+        meta, dtypes = doc.get("meta", {}), doc.get("_dtypes", {})
+    if dtypes:
+        import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
+        for k, dt in dtypes.items():
+            flat[k] = flat[k].view(np.dtype(dt))
+    return _unflatten(flat), meta

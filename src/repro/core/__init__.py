@@ -1,0 +1,10 @@
+"""The paper's contribution: federated learning via distributed mutual
+learning (loss/prediction sharing), plus the two weight-sharing baselines.
+
+- ``mutual``      Eq. 1/2 losses (categorical + Bernoulli)
+- ``federated``   Algorithm 1 engine (VisionNet case study, 3 frameworks)
+- ``distributed`` mesh-scale client-stacked steps (clients = pod axis)
+- ``fedavg``      vanilla weight-averaging baseline
+- ``async_fl``    asynchronous weight-updating baseline [4]
+"""
+from repro.core import async_fl, distributed, fedavg, federated, mutual  # noqa: F401

@@ -1,0 +1,64 @@
+"""Asynchronous weight-updating FL (the paper's baseline #2, after [4]).
+
+Algorithm 1's schedule: shallow layers are aggregated every round; deep
+layers only when ``(round+1) % delta == 0 and round >= min_round``.
+Aggregation is the metric-weighted average (``preprocessWeights`` +
+``averageWeights``), and ``updateWeights`` overwrites only the scheduled
+param group.  A server-side global model G is trained on a held-out global
+split each round (Algorithm 1 lines 6, 17-18).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedavg import weighted_average_weights
+
+Mask = Any  # pytree of bools parallel to params
+
+
+def layer_schedule(round_idx: int, delta: int = 3, min_round: int = 5) -> str:
+    """Algorithm 1 lines 12-14: 'shallow' or 'deep' for this round."""
+    if (round_idx + 1) % delta == 0 and round_idx >= min_round:
+        return "deep"
+    return "shallow"
+
+
+def update_weights(stacked_params, avg_params, shallow_mask: Mask,
+                   layer: str):
+    """Overwrite the scheduled group with the aggregate.
+
+    layer='shallow': shallow-mask leaves take the average (every round).
+    layer='deep':    deep (non-shallow) leaves take the average (every
+                     delta-th round).  Clients never fully sync — matching
+                     paper Table II, where async clients end with distinct
+                     accuracies, and Fig. 4's light/dark sharing shades.
+    """
+    want_shallow = layer == "shallow"
+    return jax.tree.map(
+        lambda sh, p, a: a if sh == want_shallow else p, shallow_mask,
+        stacked_params, avg_params)
+
+
+def async_round_update(stacked_params, scores, shallow_mask: Mask,
+                       round_idx: int, delta: int = 3, min_round: int = 5):
+    """One aggregation of the async baseline on client-stacked params."""
+    layer = layer_schedule(round_idx, delta, min_round)
+    avg = weighted_average_weights(stacked_params, scores)
+    return update_weights(stacked_params, avg, shallow_mask, layer), layer
+
+
+def comm_bytes_per_round(n_shallow: int, n_deep: int, n_clients: int,
+                         layer: str, bytes_per_param: int = 4) -> int:
+    n = n_deep if layer == "deep" else n_shallow
+    return 2 * n_clients * n * bytes_per_param
+
+
+def count_params_by_mask(params, shallow_mask: Mask):
+    flat_p = jax.tree.leaves(params)
+    flat_m = jax.tree.leaves(shallow_mask)
+    n_shallow = sum(p.size for p, m in zip(flat_p, flat_m) if m)
+    n_deep = sum(p.size for p, m in zip(flat_p, flat_m) if not m)
+    return n_shallow, n_deep

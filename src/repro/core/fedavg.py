@@ -1,0 +1,53 @@
+"""Vanilla federated learning (FedAvg, McMahan et al.) — weight baseline #1.
+
+Works on *client-stacked* pytrees (leading axis K on every leaf): averaging
+is a mean over axis 0 broadcast back — exactly an all-reduce over the client
+mesh axis when the stack is sharded client-wise.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def average_weights(stacked_params):
+    """Mean over the client axis, broadcast back.  (FedAvg aggregation.)"""
+    def avg(p):
+        mean = jnp.mean(p.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, p.shape).astype(p.dtype)
+    return jax.tree.map(avg, stacked_params)
+
+
+def weighted_average_weights(stacked_params, scores):
+    """Score-weighted FedAvg (the paper's [4] ``preprocessWeights``).
+
+    scores: (K,) non-negative client metrics (e.g. accuracy); weights are
+    scores normalised to sum 1.
+    """
+    w = jnp.asarray(scores, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+
+    def avg(p):
+        pf = p.astype(jnp.float32)
+        wb = w.reshape((-1,) + (1,) * (p.ndim - 1))
+        mean = jnp.sum(pf * wb, axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, p.shape).astype(p.dtype)
+    return jax.tree.map(avg, stacked_params)
+
+
+def stack_params(params_list: Sequence):
+    """List of per-client pytrees -> stacked pytree (K on axis 0)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *params_list)
+
+
+def unstack_params(stacked, k: int):
+    return [jax.tree.map(lambda p, i=i: p[i], stacked) for i in range(k)]
+
+
+def comm_bytes_per_round(n_params: int, n_clients: int,
+                         bytes_per_param: int = 4) -> int:
+    """Up + down traffic of one FedAvg round (every client ships all params
+    to the server and receives the average back)."""
+    return 2 * n_clients * n_params * bytes_per_param

@@ -1,0 +1,310 @@
+"""Algorithm 1 — the paper's federated loop for the VisionNet case study.
+
+Three selectable frameworks under identical conditions (paper §III.B.3:
+same architecture, same per-round data size, same epochs, IID folds):
+
+  - 'fedavg': vanilla FL — full weight averaging every round
+  - 'async' : asynchronous weight-updating FL — metric-weighted average,
+              shallow every round / deep every delta-th round, plus a
+              server-side global model trained on a global fold
+  - 'dml'   : the proposed framework — clients share only predictions on a
+              rotating public fold and descend Eq. 1
+              (BCE + avg KL vs the received, fixed predictions)
+
+Clients are a *stacked* pytree (leading axis K) and local training is
+vmapped — the same client-axis layout the mesh-scale path shards over pods.
+Communication bytes are accounted per round for the bandwidth claim.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.visionnet import VisionNetConfig
+from repro.core import async_fl, fedavg
+from repro.core.mutual import bernoulli_mutual_eval
+from repro.data.federated import FoldScheduler, NonIIDScheduler
+from repro.models.visionnet import (bce_loss, init_visionnet,
+                                    shallow_deep_split, visionnet_forward)
+from repro.optim import SGDConfig, sgd_init, sgd_update
+
+
+@dataclass
+class FederatedConfig:
+    method: str = "dml"               # dml | fedavg | async
+    n_clients: int = 5
+    rounds: int = 12
+    local_epochs: int = 2
+    batch_size: int = 32
+    lr: float = 0.05
+    momentum: float = 0.9
+    clip_norm: float = 1.0        # the Eq.-1 KL term spikes at sharing time
+                                  # (paper Fig. 4c); clipping keeps SGD stable
+    # dml
+    kl_weight: float = 1.0
+    mutual_epochs: int = 1
+    # async
+    delta: int = 3
+    min_round: int = 5
+    # non-IID client data (paper §VI future work): Dirichlet(alpha) class
+    # skew per client; 0 -> IID stratified folds (the paper's setting)
+    non_iid_alpha: float = 0.0
+    seed: int = 0
+    eval_batch: int = 256
+
+
+@dataclass
+class RoundLog:
+    round: int
+    client_loss: List[float]
+    kl_loss: List[float]
+    comm_bytes: int
+    layer: Optional[str] = None
+
+
+@dataclass
+class History:
+    rounds: List[RoundLog] = field(default_factory=list)
+    client_test_acc: List[float] = field(default_factory=list)
+    global_test_acc: float = 0.0
+    total_comm_bytes: int = 0
+
+
+# ---------------------------------------------------------------------------
+# jitted steps
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg"))
+def _local_step(params, opt, images, labels, key, vn_cfg: VisionNetConfig,
+                sgd_cfg: SGDConfig):
+    def loss_fn(p):
+        probs = visionnet_forward(p, vn_cfg, images, train=True,
+                                  dropout_key=key)
+        return bce_loss(probs, labels)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt, _ = sgd_update(params, grads, opt, sgd_cfg)
+    return params, opt, loss
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg", "kl_weight"))
+def _mutual_step(params, opt, images, labels, fixed_probs, my_idx, key,
+                 vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                 kl_weight: float):
+    """Eq. 1 step for ONE client: BCE + avg KL(live || fixed others)."""
+    K = fixed_probs.shape[0]
+
+    def loss_fn(p):
+        probs = visionnet_forward(p, vn_cfg, images, train=True,
+                                  dropout_key=key)
+        bce = bce_loss(probs, labels)
+        pl_ = jnp.clip(probs, 1e-6, 1 - 1e-6)[None, :]          # (1,B)
+        pf = jnp.clip(fixed_probs, 1e-6, 1 - 1e-6)              # (K,B)
+        kl = pl_ * jnp.log(pl_ / pf) + (1 - pl_) * jnp.log((1 - pl_) / (1 - pf))
+        mask = (jnp.arange(K) != my_idx).astype(jnp.float32)[:, None]
+        kld_avg = jnp.sum(kl * mask, axis=0) / max(K - 1, 1)    # (B,)
+        return bce + kl_weight * jnp.mean(kld_avg), (bce, jnp.mean(kld_avg))
+    (loss, (bce, kld)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt, _ = sgd_update(params, grads, opt, sgd_cfg)
+    return params, opt, loss, bce, kld
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg",))
+def _predict(params, images, vn_cfg: VisionNetConfig):
+    return visionnet_forward(params, vn_cfg, images, train=False)
+
+
+# ---------------------------------------------------------------------------
+# engine
+
+class FederatedTrainer:
+    """Runs Algorithm 1 on a (train_images, train_labels) pool."""
+
+    def __init__(self, vn_cfg: VisionNetConfig, fed_cfg: FederatedConfig,
+                 train_images: np.ndarray, train_labels: np.ndarray):
+        self.vn_cfg = vn_cfg
+        self.fed = fed_cfg
+        self.images = train_images
+        self.labels = train_labels
+        self.sgd_cfg = SGDConfig(lr=fed_cfg.lr, momentum=fed_cfg.momentum,
+                                 clip_norm=fed_cfg.clip_norm)
+        self.key = jax.random.PRNGKey(fed_cfg.seed)
+        # Algorithm 1 line 1: Fold <- (1+Clients) x Rounds + 1
+        if fed_cfg.non_iid_alpha > 0:
+            self.folds = NonIIDScheduler(train_labels, fed_cfg.n_clients,
+                                         fed_cfg.rounds,
+                                         alpha=fed_cfg.non_iid_alpha,
+                                         seed=fed_cfg.seed)
+        else:
+            self.folds = FoldScheduler(train_labels, fed_cfg.n_clients,
+                                       fed_cfg.rounds, seed=fed_cfg.seed)
+        # line 3/6: global model trained on public fold
+        self.key, kg = jax.random.split(self.key)
+        self.global_params = init_visionnet(kg, vn_cfg)
+        self.global_opt = sgd_init(self.global_params)
+        self._train_single("global", self.folds.pop())
+        # lines 7-8: clients start from G
+        K = fed_cfg.n_clients
+        self.client_params = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (K,) + p.shape).copy(),
+            self.global_params)
+        self.client_opts = {
+            "vel": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                self.client_params),
+            "step": jnp.zeros((K,), jnp.int32)}
+        self.n_params = sum(p.size for p in jax.tree.leaves(self.global_params))
+        self.shallow_mask = shallow_deep_split(self.global_params)
+        self.history = History()
+
+    # -- helpers ----------------------------------------------------------
+    def _batches(self, fold: np.ndarray, epochs: int):
+        bs = self.fed.batch_size
+        rng = np.random.default_rng(int(fold[0]) + 17)
+        for _ in range(epochs):
+            order = rng.permutation(len(fold))
+            for i in range(0, len(order) - bs + 1, bs):
+                idx = fold[order[i: i + bs]]
+                yield self.images[idx], self.labels[idx]
+
+    def _train_single(self, which: str, fold: np.ndarray):
+        losses = []
+        for imgs, labs in self._batches(fold, self.fed.local_epochs):
+            self.key, k = jax.random.split(self.key)
+            self.global_params, self.global_opt, loss = _local_step(
+                self.global_params, self.global_opt, jnp.asarray(imgs),
+                jnp.asarray(labs), k, self.vn_cfg, self.sgd_cfg)
+            losses.append(float(loss))
+        return float(np.mean(losses)) if losses else 0.0
+
+    def _train_client(self, c: int, fold: np.ndarray) -> float:
+        """Local training of client c (stacked storage, per-client slices)."""
+        params = jax.tree.map(lambda p: p[c], self.client_params)
+        opt = {"vel": jax.tree.map(lambda p: p[c], self.client_opts["vel"]),
+               "step": self.client_opts["step"][c]}
+        losses = []
+        for imgs, labs in self._batches(fold, self.fed.local_epochs):
+            self.key, k = jax.random.split(self.key)
+            params, opt, loss = _local_step(params, opt, jnp.asarray(imgs),
+                                            jnp.asarray(labs), k,
+                                            self.vn_cfg, self.sgd_cfg)
+            losses.append(float(loss))
+        self.client_params = jax.tree.map(
+            lambda s, p: s.at[c].set(p), self.client_params, params)
+        self.client_opts["vel"] = jax.tree.map(
+            lambda s, p: s.at[c].set(p), self.client_opts["vel"], opt["vel"])
+        self.client_opts["step"] = self.client_opts["step"].at[c].set(opt["step"])
+        return float(np.mean(losses)) if losses else 0.0
+
+    def _client_accuracy(self, c: int, images, labels) -> float:
+        params = jax.tree.map(lambda p: p[c], self.client_params)
+        correct = 0
+        for i in range(0, len(images), self.fed.eval_batch):
+            probs = _predict(params, jnp.asarray(images[i:i + self.fed.eval_batch]),
+                             self.vn_cfg)
+            correct += int(np.sum((np.asarray(probs) > 0.5) ==
+                                  labels[i:i + self.fed.eval_batch]))
+        return correct / len(images)
+
+    def _accuracy_on(self, params, images, labels) -> float:
+        correct = 0
+        for i in range(0, len(images), self.fed.eval_batch):
+            probs = _predict(params, jnp.asarray(images[i:i + self.fed.eval_batch]),
+                             self.vn_cfg)
+            correct += int(np.sum((np.asarray(probs) > 0.5) ==
+                                  labels[i:i + self.fed.eval_batch]))
+        return correct / len(images)
+
+    # -- rounds -----------------------------------------------------------
+    def run(self) -> History:
+        for r in range(self.fed.rounds):
+            if self.fed.method == "dml":
+                self._round_dml(r)
+            elif self.fed.method == "fedavg":
+                self._round_fedavg(r)
+            elif self.fed.method == "async":
+                self._round_async(r)
+            else:
+                raise ValueError(self.fed.method)
+        return self.history
+
+    def _round_dml(self, r: int):
+        K = self.fed.n_clients
+        local_losses = [self._train_client(c, self.folds.pop())
+                        for c in range(K)]
+        # public fold: rotating common test set from the server
+        pub = self.folds.pop()
+        pub_imgs = jnp.asarray(self.images[pub])
+        pub_labs = jnp.asarray(self.labels[pub])
+        kl_losses = [0.0] * K
+        for _ in range(self.fed.mutual_epochs):
+            # inference + sharing: each client ships (B_pub,) probabilities
+            all_probs = jnp.stack([
+                _predict(jax.tree.map(lambda p: p[c], self.client_params),
+                         pub_imgs, self.vn_cfg) for c in range(K)])
+            comm = 2 * K * all_probs.shape[1] * 4        # up + broadcast down
+            for c in range(K):
+                params = jax.tree.map(lambda p: p[c], self.client_params)
+                opt = {"vel": jax.tree.map(lambda p: p[c], self.client_opts["vel"]),
+                       "step": self.client_opts["step"][c]}
+                self.key, k = jax.random.split(self.key)
+                params, opt, loss, bce, kld = _mutual_step(
+                    params, opt, pub_imgs, pub_labs, all_probs,
+                    jnp.int32(c), k, self.vn_cfg, self.sgd_cfg,
+                    self.fed.kl_weight)
+                kl_losses[c] = float(kld)
+                local_losses[c] = float(loss)
+                self.client_params = jax.tree.map(
+                    lambda s, p: s.at[c].set(p), self.client_params, params)
+                self.client_opts["vel"] = jax.tree.map(
+                    lambda s, p: s.at[c].set(p), self.client_opts["vel"],
+                    opt["vel"])
+                self.client_opts["step"] = \
+                    self.client_opts["step"].at[c].set(opt["step"])
+        self.history.total_comm_bytes += comm
+        self.history.rounds.append(RoundLog(r, local_losses, kl_losses, comm))
+
+    def _round_fedavg(self, r: int):
+        K = self.fed.n_clients
+        losses = [self._train_client(c, self.folds.pop()) for c in range(K)]
+        self.folds.pop()                                  # global fold unused
+        self.client_params = fedavg.average_weights(self.client_params)
+        self.global_params = jax.tree.map(lambda p: p[0], self.client_params)
+        comm = fedavg.comm_bytes_per_round(self.n_params, K)
+        self.history.total_comm_bytes += comm
+        self.history.rounds.append(RoundLog(r, losses, [0.0] * K, comm))
+
+    def _round_async(self, r: int):
+        K = self.fed.n_clients
+        losses, scores = [], []
+        for c in range(K):
+            fold = self.folds.pop()
+            losses.append(self._train_client(c, fold))
+            scores.append(self._client_accuracy(c, self.images[fold],
+                                                self.labels[fold]))
+        stacked_mask = jax.tree.map(
+            lambda m: m, self.shallow_mask)               # same mask all clients
+        self.client_params, layer = async_fl.async_round_update(
+            self.client_params, jnp.asarray(scores), stacked_mask, r,
+            self.fed.delta, self.fed.min_round)
+        # Algorithm 1 lines 17-18: G takes the average then trains on a fold
+        self.global_params = jax.tree.map(lambda p: p[0], self.client_params)
+        gl = self._train_single("global", self.folds.pop())
+        n_sh, n_dp = async_fl.count_params_by_mask(self.global_params,
+                                                   self.shallow_mask)
+        comm = async_fl.comm_bytes_per_round(n_sh, n_dp, K, layer)
+        self.history.total_comm_bytes += comm
+        self.history.rounds.append(RoundLog(r, losses, [0.0] * K, comm,
+                                            layer=layer))
+
+    # -- final eval (paper Table II / Fig. 3) ------------------------------
+    def evaluate(self, test_images: np.ndarray, test_labels: np.ndarray):
+        K = self.fed.n_clients
+        self.history.client_test_acc = [
+            self._client_accuracy(c, test_images, test_labels)
+            for c in range(K)]
+        self.history.global_test_acc = self._accuracy_on(
+            self.global_params, test_images, test_labels)
+        return self.history

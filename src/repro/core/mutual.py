@@ -1,0 +1,188 @@
+"""Deep mutual learning losses — the paper's Eq. 1 and Eq. 2.
+
+    Loss_i    = ModelLoss_i + KLD_avg_i                       (Eq. 1)
+    KLD_avg_i = 1/(K-1) * sum_{j != i} KL(P_i || P_j)         (Eq. 2)
+
+Two gradient semantics:
+  - ``mutual_kl_terms(live, fixed)``: the *federated* semantics — each client
+    descends its own loss with the received predictions held constant
+    (``fixed`` should be stop_gradient'ed).  Used inside train steps.
+  - ``ops.mutual_kl``: forward-only fused kernel — the sharing/eval hot path
+    (what actually gets computed on the public set and broadcast).
+
+Categorical KL over the vocab for LLMs; Bernoulli KL for the paper's
+sigmoid VisionNet head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def mutual_kl_terms(live_logits, fixed_logits, temperature: float = 1.0):
+    """Eq. 2 with the j-side fixed.  (K, B, V) x (K, B, V) -> (K, B).
+
+    out[i, b] = 1/(K-1) sum_{j != i} KL(softmax(live_i) || softmax(fixed_j)).
+    Pass ``fixed_logits = jax.lax.stop_gradient(live_logits)`` for the
+    federated gradient semantics (others' predictions are received data).
+    """
+    K = live_logits.shape[0]
+    lp_live = jax.nn.log_softmax(
+        live_logits.astype(jnp.float32) / temperature, axis=-1)
+    p_live = jnp.exp(lp_live)
+    lp_fixed = jax.nn.log_softmax(
+        fixed_logits.astype(jnp.float32) / temperature, axis=-1)
+    self_term = jnp.sum(p_live * lp_live, axis=-1)          # (K,B)
+    cross = jnp.einsum("ibv,jbv->ijb", p_live, lp_fixed)    # (i,j,B)
+    kl = self_term[:, None, :] - cross
+    mask = (1.0 - jnp.eye(K))[:, :, None]
+    return jnp.sum(kl * mask, axis=1) / max(K - 1, 1)
+
+
+def mutual_kl_loss(all_logits, temperature: float = 1.0,
+                   stop_grad_others: bool = True):
+    """Per-client mean Eq.-2 loss from a live stacked logits tensor.
+
+    all_logits: (K, B, V) (flatten (B, S) upstream).  Returns (K,) scalars.
+    """
+    fixed = jax.lax.stop_gradient(all_logits) if stop_grad_others else all_logits
+    terms = mutual_kl_terms(all_logits, fixed, temperature)
+    return jnp.mean(terms, axis=-1)
+
+
+def mutual_kl_eval(all_logits, temperature: float = 1.0, impl=None):
+    """Forward-only Eq. 2 via the fused kernel (sharing/benchmark path)."""
+    return ops.mutual_kl(all_logits, temperature=temperature, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# sparse (top-k) prediction sharing — beyond-paper bandwidth optimisation.
+# Clients publish only (indices, log-probs) of their top-k tokens; the
+# receiver treats the residual mass as uniform over the tail.  Cross-client
+# bytes drop by V/k (e.g. 152064/64 ≈ 2400x) at a small KL approximation
+# error.  See EXPERIMENTS.md §Perf.
+
+def _distributed_topk(logp, k: int):
+    """Two-stage top-k that never gathers the vocab axis.
+
+    XLA's SPMD partitioning of sort/top_k REPLICATES every non-sort dim
+    (measured: the full (K, B, V) logits all-gathered across pods).  We
+    instead shard_map: local top-k per vocab shard, all-gather only the
+    k·n_shards candidates (tiny), then a final local top-k.  Falls back to
+    plain top_k when there is no mesh / no sharded vocab axis.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import get_rules
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or not mesh.axis_names:
+        return jax.lax.top_k(logp, k)
+    rules = get_rules()
+    vocab_ax = rules.get("vocab")
+    client_ax = rules.get("client")
+    axes = mesh.axis_names
+    vocab_ax = vocab_ax if vocab_ax in axes else None
+    client_ax = client_ax if (client_ax in axes and
+                              logp.shape[0] % mesh.shape[client_ax] == 0) \
+        else None
+    if vocab_ax is None or logp.shape[-1] % mesh.shape[vocab_ax] != 0:
+        return jax.lax.top_k(logp, k)
+
+    def local(lp):                             # (K_loc, B, V_loc)
+        v, i = jax.lax.top_k(lp, min(k, lp.shape[-1]))
+        i = i + jax.lax.axis_index(vocab_ax) * lp.shape[-1]
+        vg = jax.lax.all_gather(v, vocab_ax, axis=-1, tiled=True)
+        ig = jax.lax.all_gather(i, vocab_ax, axis=-1, tiled=True)
+        vv, sel = jax.lax.top_k(vg, k)
+        return jnp.take_along_axis(ig, sel, axis=-1), vv
+
+    spec_in = P(client_ax, *([None] * (logp.ndim - 2)), vocab_ax)
+    spec_out = P(client_ax, *([None] * (logp.ndim - 1)))
+    idx, vals = jax.shard_map(local, mesh=mesh, in_specs=(spec_in,),
+                              out_specs=(spec_out, spec_out),
+                              check_vma=False)(logp)
+    return vals, idx
+
+
+def topk_predictions(logits, k: int, temperature: float = 1.0):
+    """What a client publishes: (indices (..., k), log-probs (..., k))."""
+    from repro.sharding import constrain
+    lf = logits.astype(jnp.float32) / temperature
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    vals, idx = _distributed_topk(logp, k)
+    tail = (None,) * (logits.ndim - 1)
+    return (constrain(idx, "client", *tail),
+            constrain(vals, "client", *tail))
+
+
+def sparse_mutual_kl_loss(live_logits, idx, logp_top,
+                          temperature: float = 1.0):
+    """Eq. 2 against RECEIVED sparse predictions.
+
+    live_logits: (K, B, V) — local, differentiable.
+    idx, logp_top: (K, B, k) — received top-k sets (treated as constants).
+
+    KL(P_i || ~P_j) with ~P_j = top-k of P_j + uniform tail:
+        KL_ij = -H(P_i) - c_j (1 - s_ij) - sum_t p_i[idx_j,t] logp_j[t]
+    where s_ij = sum_t p_i[idx_j,t] and c_j = log(residual_j / (V - k)).
+    Returns (K,) per-client means over B.
+    """
+    K, B, V = live_logits.shape
+    k = idx.shape[-1]
+    idx = jax.lax.stop_gradient(idx)
+    logp_top = jax.lax.stop_gradient(logp_top.astype(jnp.float32))
+    lp_live = jax.nn.log_softmax(
+        live_logits.astype(jnp.float32) / temperature, axis=-1)
+    p_live = jnp.exp(lp_live)                            # (K,B,V)
+    neg_h = jnp.sum(p_live * lp_live, axis=-1)           # (K,B)
+
+    residual = jnp.clip(1.0 - jnp.sum(jnp.exp(logp_top), axis=-1),
+                        1e-9, 1.0)                       # (K,B)
+    c = jnp.log(residual / max(V - k, 1))                # (K,B)
+
+    # pairwise gather WITHOUT materialising a (K, K, B, V) operand: loop the
+    # (small, static) j axis; each step gathers only (K, B, k) values.  The
+    # broadcast of client j's indices must be re-constrained to the client
+    # axis or SPMD un-shards K and all-gathers p_live across pods (measured:
+    # 98 GiB/device — see EXPERIMENTS.md §Perf pick 3).
+    from repro.sharding import constrain
+    p_ats = []
+    for j in range(K):
+        idx_j = jnp.broadcast_to(idx[j][None], (K, B, k))
+        idx_j = constrain(idx_j, "client", None, None)
+        p_at_j = jnp.take_along_axis(p_live, idx_j, axis=-1)
+        p_ats.append(constrain(p_at_j, "client", None, None))
+    p_at = jnp.stack(p_ats, axis=1)                      # (i,j,B,k)
+    p_at = constrain(p_at, "client", None, None, None)
+    s = jnp.sum(p_at, axis=-1)                           # (i,j,B)
+    cross_top = jnp.sum(p_at * logp_top[None], axis=-1)  # (i,j,B)
+    kl = neg_h[:, None, :] - c[None] * (1.0 - s) - cross_top
+    mask = (1.0 - jnp.eye(K))[:, :, None]
+    terms = jnp.sum(kl * mask, axis=1) / max(K - 1, 1)   # (K,B)
+    return jnp.mean(terms, axis=-1)
+
+
+def sparse_share_bytes(n_clients: int, n_examples: int, k: int) -> int:
+    """Per-round traffic of top-k sharing (int32 idx + fp32 logp, up+down)."""
+    return 2 * n_clients * n_examples * k * 8
+
+
+# ---------------------------------------------------------------------------
+# Bernoulli case (VisionNet sigmoid head — the paper's actual case study)
+
+def bernoulli_mutual_loss(all_probs, stop_grad_others: bool = True):
+    """all_probs: (K, B) sigmoid outputs -> (K,) per-client Eq.-2 means."""
+    K = all_probs.shape[0]
+    p = jnp.clip(all_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)
+    q = jax.lax.stop_gradient(p) if stop_grad_others else p
+    pi = p[:, None, :]
+    pj = q[None, :, :]
+    kl = pi * jnp.log(pi / pj) + (1 - pi) * jnp.log((1 - pi) / (1 - pj))
+    mask = (1.0 - jnp.eye(K))[:, :, None]
+    terms = jnp.sum(kl * mask, axis=1) / max(K - 1, 1)       # (K,B)
+    return jnp.mean(terms, axis=-1)
+
+
+def bernoulli_mutual_eval(all_probs):
+    return ref.bernoulli_mutual_kl(all_probs)

@@ -1,0 +1,2 @@
+"""Data substrate: synthetic generators + federated sharding/rotation."""
+from repro.data import federated, synthetic  # noqa: F401

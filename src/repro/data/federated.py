@@ -1,0 +1,135 @@
+"""Federated data plumbing: stratified K-folds (Algorithm 1), client shards,
+Dirichlet non-IID splits, and the per-round public-set rotation."""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def stratified_k_folds(labels: np.ndarray, n_folds: int,
+                       seed: int = 0) -> List[np.ndarray]:
+    """Index folds preserving class balance (paper line 1:
+    Fold <- (1+Clients) x Rounds + 1)."""
+    rng = np.random.default_rng(seed)
+    folds: List[List[int]] = [[] for _ in range(n_folds)]
+    for cls in np.unique(labels):
+        idx = np.flatnonzero(labels == cls)
+        rng.shuffle(idx)
+        for i, chunk in enumerate(np.array_split(idx, n_folds)):
+            folds[i].extend(chunk.tolist())
+    out = []
+    for f in folds:
+        arr = np.array(sorted(f), np.int64)
+        rng.shuffle(arr)
+        out.append(arr)
+    return out
+
+
+class FoldScheduler:
+    """Algorithm 1's ``Fold.pop()`` discipline.
+
+    Fold count = (1 + K) * rounds + 1: one fold to initialise the global
+    model, then per round one fold per client + one for the global model /
+    public mutual-learning set.
+    """
+
+    def __init__(self, labels: np.ndarray, n_clients: int, rounds: int,
+                 seed: int = 0):
+        self.n_folds = (1 + n_clients) * rounds + 1
+        self._folds = stratified_k_folds(labels, self.n_folds, seed)
+        self._cursor = 0
+
+    def pop(self) -> np.ndarray:
+        assert self._cursor < self.n_folds, "fold budget exhausted"
+        f = self._folds[self._cursor]
+        self._cursor += 1
+        return f
+
+    def remaining(self) -> int:
+        return self.n_folds - self._cursor
+
+
+class NonIIDScheduler:
+    """Fold discipline with Dirichlet(alpha) class skew per client
+    (the paper's §VI future-work setting).
+
+    Pop-order compatible with Algorithm 1 / FoldScheduler: one shared
+    (public/global) fold at init, then per round K client folds followed by
+    one shared fold.  Shared folds stay class-balanced (the server's public
+    set is public data); each client's folds are drawn from its own skewed
+    shard, split across rounds.
+    """
+
+    def __init__(self, labels: np.ndarray, n_clients: int, rounds: int,
+                 alpha: float = 0.3, seed: int = 0):
+        self.n_folds = (1 + n_clients) * rounds + 1
+        self.n_clients = n_clients
+        self.rounds = rounds
+        rng = np.random.default_rng(seed)
+        n = len(labels)
+        # hold out a balanced pool for the (rounds + 1) shared folds
+        shared_pool_size = n * (rounds + 1) // self.n_folds
+        order = rng.permutation(n)
+        shared_pool, client_pool = order[:shared_pool_size], order[shared_pool_size:]
+        shared_folds = stratified_k_folds(labels[shared_pool], rounds + 1,
+                                          seed)
+        self._shared = [shared_pool[f] for f in shared_folds]
+        shards = dirichlet_shards(labels[client_pool], n_clients, alpha,
+                                  seed + 1)
+        self._client = []
+        for shard in shards:
+            idx = client_pool[shard]
+            rng.shuffle(idx)
+            self._client.append(np.array_split(idx, rounds))
+        self._round = 0
+        self._pos = 0            # 0 = next pop is shared-init / post-round
+        self._init_done = False
+
+    def pop(self) -> np.ndarray:
+        if not self._init_done:
+            self._init_done = True
+            return self._shared[0]
+        assert self._round < self.rounds, "fold budget exhausted"
+        if self._pos < self.n_clients:
+            f = self._client[self._pos][self._round]
+            self._pos += 1
+            return f
+        f = self._shared[1 + self._round]
+        self._round += 1
+        self._pos = 0
+        return f
+
+    def remaining(self) -> int:
+        used = 1 if self._init_done else 0
+        used += self._round * (self.n_clients + 1) + self._pos
+        return self.n_folds - used
+
+
+def dirichlet_shards(labels: np.ndarray, n_clients: int, alpha: float,
+                     seed: int = 0) -> List[np.ndarray]:
+    """Non-IID client shards via per-class Dirichlet allocation."""
+    rng = np.random.default_rng(seed)
+    shards: List[List[int]] = [[] for _ in range(n_clients)]
+    for cls in np.unique(labels):
+        idx = np.flatnonzero(labels == cls)
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
+        for shard, part in zip(shards, np.split(idx, cuts)):
+            shard.extend(part.tolist())
+    return [np.array(sorted(s), np.int64) for s in shards]
+
+
+def iid_shards(n: int, n_clients: int, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    return [np.sort(part) for part in np.array_split(order, n_clients)]
+
+
+def public_round_sets(labels: np.ndarray, rounds: int,
+                      per_round: int, seed: int = 0) -> List[np.ndarray]:
+    """Rotating public test sets — 'dynamically changing test dataset
+    provided by the central server ... varies in each round' (paper §III.A)."""
+    folds = stratified_k_folds(labels, rounds, seed)
+    return [f[:per_round] for f in folds]

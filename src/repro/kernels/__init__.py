@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots, with jnp oracles.
+
+- kl_mutual:        fused mutual-learning KL (paper Eq. 2) over the vocab
+- flash_attention:  blockwise causal/sliding-window GQA attention
+- ssd_scan:         Mamba2 SSD chunked scan with VMEM-resident state
+
+``repro.kernels.ops`` is the public entry point (impl switch: ref /
+interpret / pallas); ``repro.kernels.ref`` holds the oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

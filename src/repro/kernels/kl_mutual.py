@@ -1,0 +1,99 @@
+"""Fused mutual-learning KL Pallas kernel (paper Eq. 2 at vocab scale).
+
+Computes, for client-stacked logits (K, B, V):
+
+    out[i, b] = 1/(K-1) * sum_{j != i} KL(P_i(b) || P_j(b))
+
+in ONE streaming pass over the vocabulary — no K softmax tensors ever hit
+HBM.  Uses a flash-style online decomposition:
+
+    KL(P_i || P_j) = (Z_j - Z_i) + (1/A_i) * sum_v e^{g_i - m_i} (g_i - g_j)
+
+with running max m_i, rescaled partition A_i = sum_v e^{g_i - m_i}
+(so Z_i = m_i + log A_i) and a (K x K) cross-accumulator
+T_ij = sum_v e^{g_i - m_i} (g_i - g_j), all rescaled when m_i grows.
+
+Grid: (B / bb, V / bv) with the vocab block innermost + sequential; scratch
+(m, A, T) persists across vocab blocks in VMEM.  K is small (#clients), so
+the T accumulator is (K, K, bb).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kl_kernel(logits_ref, out_ref, m_ref, a_ref, t_ref, *,
+               K: int, n_v_blocks: int, inv_temp: float):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        a_ref[...] = jnp.zeros_like(a_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    g = logits_ref[...].astype(jnp.float32) * inv_temp   # (K, bb, bv)
+
+    m_prev = m_ref[...]                                  # (K, bb)
+    m_new = jnp.maximum(m_prev, jnp.max(g, axis=-1))
+    scale = jnp.exp(m_prev - m_new)                      # (K, bb)
+    e = jnp.exp(g - m_new[..., None])                    # (K, bb, bv)
+
+    a_ref[...] = a_ref[...] * scale + jnp.sum(e, axis=-1)
+    m_ref[...] = m_new
+    # T_ij += sum_v e_i * (g_i - g_j);   rescale rows by scale_i
+    diff = g[:, None, :, :] - g[None, :, :, :]           # (K, K, bb, bv)
+    t_ref[...] = t_ref[...] * scale[:, None, :] + \
+        jnp.sum(e[:, None, :, :] * diff, axis=-1)
+
+    @pl.when(iv == n_v_blocks - 1)
+    def _finish():
+        m = m_ref[...]
+        a = a_ref[...]
+        z = m + jnp.log(a)                               # (K, bb)
+        # KL(i||j) = (Z_j - Z_i) + T_ij / A_i
+        kl = (z[None, :, :] - z[:, None, :]) + t_ref[...] / a[:, None, :]
+        mask = 1.0 - jnp.eye(K, dtype=jnp.float32)       # zero the diagonal
+        avg = jnp.sum(kl * mask[:, :, None], axis=1) / max(K - 1, 1)
+        out_ref[...] = avg.astype(out_ref.dtype)
+
+
+def kl_mutual(logits, *, temperature: float = 1.0,
+              block_b: int = 128, block_v: int = 2048,
+              interpret: bool = False):
+    """logits: (K, B, V) -> (K, B) average pairwise KL per example."""
+    K, B, V = logits.shape
+    bb = min(block_b, B)
+    bv = min(block_v, V)
+    pad_b = (-B) % bb
+    pad_v = (-V) % bv
+    if pad_b or pad_v:
+        # vocab padding uses NEG_INF so e -> 0 and (identical) diffs -> 0
+        logits = jnp.pad(logits, ((0, 0), (0, pad_b), (0, pad_v)),
+                         constant_values=NEG_INF)
+    Bp, Vp = B + pad_b, V + pad_v
+    n_b, n_v = Bp // bb, Vp // bv
+
+    kernel = functools.partial(_kl_kernel, K=K, n_v_blocks=n_v,
+                               inv_temp=1.0 / temperature)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_b, n_v),
+        in_specs=[pl.BlockSpec((K, bb, bv), lambda ib, iv: (0, ib, iv))],
+        out_specs=pl.BlockSpec((K, bb), lambda ib, iv: (0, ib)),
+        out_shape=jax.ShapeDtypeStruct((K, Bp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((K, bb), jnp.float32),
+            pltpu.VMEM((K, bb), jnp.float32),
+            pltpu.VMEM((K, K, bb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return out[:, :B]

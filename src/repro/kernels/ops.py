@@ -1,0 +1,87 @@
+"""jit-friendly kernel entry points with a runtime impl switch.
+
+impl values:
+  - "ref":       pure-jnp oracle (XLA-native; used by the dry-run so roofline
+                 numbers reflect the compiler's own schedule)
+  - "interpret": Pallas kernel body interpreted on CPU (correctness tests)
+  - "pallas":    compiled Pallas TPU kernel (the production target)
+
+Default comes from REPRO_KERNEL_IMPL or "ref"; override per-scope with
+``use_impl("interpret")``.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Optional
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kl_mutual import kl_mutual as _kl_mutual_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+_local = threading.local()
+
+
+def get_impl() -> str:
+    return getattr(_local, "impl", os.environ.get("REPRO_KERNEL_IMPL", "ref"))
+
+
+def set_impl(impl: str) -> None:
+    assert impl in ("ref", "interpret", "pallas", "xla_flash"), impl
+    _local.impl = impl
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    old = get_impl()
+    set_impl(impl)
+    try:
+        yield
+    finally:
+        set_impl(old)
+
+
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              positions_q=None, positions_k=None, impl: Optional[str] = None):
+    """(B, S, H, hd)-layout attention dispatching to flash kernel or oracle.
+
+    Explicit positions (the decode/cache path) always use the oracle — the
+    flash kernel serves the self-attention train/prefill hot path.
+    """
+    impl = impl or get_impl()
+    if positions_q is not None or positions_k is not None:
+        # decode/cache path: explicit positions -> oracle
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             positions_q=positions_q, positions_k=positions_k)
+    if impl == "ref":
+        return ref.attention(q, k, v, causal=causal, window=window)
+    if impl == "xla_flash":
+        return ref.attention_xla_flash(q, k, v, causal=causal, window=window)
+    qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          interpret=(impl == "interpret"))
+    return out.transpose(0, 2, 1, 3)
+
+
+def mutual_kl(logits, *, temperature: float = 1.0, impl: Optional[str] = None):
+    """(K, B, V) -> (K, B) average pairwise KL (paper Eq. 2)."""
+    impl = impl or get_impl()
+    if impl == "ref":
+        return ref.mutual_kl(logits, temperature=temperature)
+    return _kl_mutual_pallas(logits, temperature=temperature,
+                             interpret=(impl == "interpret"))
+
+
+def ssd(x, dt, A, B_mat, C_mat, *, chunk: int = 256, initial_state=None,
+        impl: Optional[str] = None):
+    """Mamba2 SSD scan -> (y, final_state)."""
+    impl = impl or get_impl()
+    if impl == "ref" or initial_state is not None:
+        return ref.ssd(x, dt, A, B_mat, C_mat, chunk=chunk,
+                       initial_state=initial_state)
+    return _ssd_pallas(x, dt, A, B_mat, C_mat, chunk=chunk,
+                       interpret=(impl == "interpret"))

@@ -1,0 +1,204 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: kernel tests assert_allclose against
+them, and the dry-run lowers them (XLA-native) so roofline numbers reflect
+the compiler's own scheduling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None,
+              positions_q=None, positions_k=None):
+    """Grouped-query attention oracle.
+
+    q: (B, S, Hq, hd);  k, v: (B, T, Hkv, hd);  Hq % Hkv == 0.
+    positions_*: optional absolute positions (B, S)/(B, T); entries < 0 in
+    positions_k mark invalid (unwritten) cache slots.  Without positions,
+    q/k index within the array is the position (self-attention).
+    Returns (B, S, Hq, hd) in q.dtype; softmax in fp32.
+    """
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bskgh,btkh->bksgt", qf, kf) * (hd ** -0.5)
+
+    if positions_q is None:
+        positions_q = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if positions_k is None:
+        positions_k = jnp.broadcast_to(jnp.arange(T), (B, T))
+    pq = positions_q[:, None, :, None, None]            # (B,1,S,1,1)
+    pk = positions_k[:, None, None, None, :]            # (B,1,1,1,T)
+    mask = pk >= 0
+    if causal:
+        mask &= pk <= pq
+    if window is not None:
+        mask &= pq - pk < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bksgt,btkh->bskgh", probs, vf)
+    return out.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def attention_xla_flash(q, k, v, *, causal: bool = True,
+                        window=None, block_k: int = 512):
+    """Online-softmax attention in pure jnp (lax.scan over KV blocks).
+
+    XLA-lowerable flash algorithm: never materialises the (S, T) score
+    matrix, so the dry-run's memory/HLO-bytes terms reflect the Pallas
+    kernel's behaviour instead of the O(S^2) oracle.  Same contract as
+    ``attention`` for the self-attention (train/prefill) case.
+    """
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bk = min(block_k, T)
+    pad = (-T) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = (T + pad) // bk
+    qf = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32) * (hd ** -0.5)
+    kb = k.reshape(B, nblk, bk, Hkv, hd).astype(jnp.float32)
+    vb = v.reshape(B, nblk, bk, Hkv, hd).astype(jnp.float32)
+    qpos = jnp.arange(S)
+
+    def body(carry, kblk, vblk, jblk):
+        m, l, acc = carry
+        s = jnp.einsum("bskgh,btkh->bksgt", qf, kblk)   # (B,Hkv,S,G,bk)
+        kpos = jblk * bk + jnp.arange(bk)
+        mask = kpos[None, :] < T
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask[None, None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l = l * scale + jnp.sum(p, axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum("bksgt,btkh->bksgh", p, vblk)
+        return (m_new, l, acc)
+
+    m = jnp.full((B, Hkv, S, G), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Hkv, S, G), jnp.float32)
+    acc = jnp.zeros((B, Hkv, S, G, hd), jnp.float32)
+    # static Python loop, NOT lax.scan: XLA's cost analysis counts a scan
+    # body once regardless of trip count, which would corrupt the dry-run's
+    # roofline terms (the blocks stay fused either way).
+    for j in range(nblk):
+        m, l, acc = body((m, l, acc), kb[:, j], vb[:, j], j)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,Hkv,S,G,hd)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, S, Hq, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mutual-learning KL (the paper's Eq. 2 at vocabulary scale)
+
+def mutual_kl(logits, temperature: float = 1.0):
+    """Average pairwise KL of each client against the rest.
+
+    logits: (K, B, V).  Returns (K, B):
+        out[i, b] = 1/(K-1) * sum_{j != i} KL(P_i(b) || P_j(b))
+    with P = softmax(logits / T).  fp32 internally.
+    """
+    K = logits.shape[0]
+    lf = logits.astype(jnp.float32) / temperature
+    logp = jax.nn.log_softmax(lf, axis=-1)              # (K,B,V)
+    p = jnp.exp(logp)
+    self_term = jnp.sum(p * logp, axis=-1)              # (K,B)
+    cross = jnp.einsum("ibv,jbv->ijb", p, logp)         # (i,j,B)
+    kl = self_term[:, None, :] - cross                  # KL(i||j)
+    mask = (1.0 - jnp.eye(K))[:, :, None]
+    denom = max(K - 1, 1)
+    return jnp.sum(kl * mask, axis=1) / denom
+
+
+def bernoulli_mutual_kl(probs):
+    """Eq. 2 for the paper's sigmoid binary head.  probs: (K, B) in (0,1)."""
+    K = probs.shape[0]
+    p = jnp.clip(probs.astype(jnp.float32), 1e-7, 1 - 1e-7)
+    pi = p[:, None, :]                                   # (i,1,B)
+    pj = p[None, :, :]                                   # (1,j,B)
+    kl = pi * jnp.log(pi / pj) + (1 - pi) * jnp.log((1 - pi) / (1 - pj))
+    mask = (1.0 - jnp.eye(K))[:, :, None]
+    return jnp.sum(kl * mask, axis=1) / max(K - 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) chunked scan
+
+def ssd(x, dt, A, B_mat, C_mat, *, chunk: int = 256,
+        initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan oracle.
+
+    x:     (B, S, H, P)   pre-gated inputs
+    dt:    (B, S, H)      positive step sizes (softplus already applied)
+    A:     (H,)           negative decay rates
+    B_mat: (B, S, G, N)   input projections (G groups, H % G == 0)
+    C_mat: (B, S, G, N)   output projections
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, Pd = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B_mat, C_mat = map(zf, (x, dt, B_mat, C_mat))
+    Sp = S + pad
+    nc = Sp // chunk
+    xc = x.reshape(Bb, nc, chunk, H, Pd).astype(jnp.float32)
+    dtc = dt.reshape(Bb, nc, chunk, H).astype(jnp.float32)
+    Bc = jnp.repeat(B_mat.reshape(Bb, nc, chunk, G, N), rep, axis=3).astype(jnp.float32)
+    Cc = jnp.repeat(C_mat.reshape(Bb, nc, chunk, G, N), rep, axis=3).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    dA = dtc * Af                                        # (B,nc,L,H) <= 0
+    cs = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+
+    if initial_state is None:
+        initial_state = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+
+    def chunk_body(state, inp):
+        xc_, dtc_, Bc_, Cc_, cs_ = inp                   # leading dim = B
+        L = xc_.shape[1]
+        # intra-chunk: M[t,s] = C_t.B_s * exp(cs_t - cs_s) * dt_s,  s <= t
+        scores = jnp.einsum("blhn,bshn->bhls", Cc_, Bc_)
+        # exponent is <= 0 only on the causal (t >= s) triangle; clamp the
+        # masked half before exp so inf * 0 never produces NaN
+        expo = cs_[:, :, None, :] - cs_[:, None, :, :]              # (B,t,s,H)
+        decay = jnp.exp(jnp.minimum(expo, 0.0))
+        decay = jnp.transpose(decay, (0, 3, 1, 2))                  # (B,H,t,s)
+        tri = jnp.tril(jnp.ones((L, L), jnp.float32))
+        w = scores * decay * jnp.transpose(dtc_, (0, 2, 1))[:, :, None, :] * tri
+        y_intra = jnp.einsum("bhls,bshp->blhp", w, xc_)
+        # inter-chunk: y += exp(cs_t) * C_t . state
+        y_inter = jnp.einsum("blhn,bhpn->blhp", Cc_, state) \
+            * jnp.exp(cs_)[..., None]
+        # state update
+        tail = jnp.exp(cs_[:, -1:, :] - cs_) * dtc_                  # (B,L,H)
+        state = jnp.exp(cs_[:, -1, :])[:, :, None, None] * state + \
+            jnp.einsum("blhn,blhp,blh->bhpn", Bc_, xc_, tail)
+        return state, y_intra + y_inter
+
+    xs = (jnp.swapaxes(xc, 0, 1), jnp.swapaxes(dtc, 0, 1),
+          jnp.swapaxes(Bc, 0, 1), jnp.swapaxes(Cc, 0, 1),
+          jnp.swapaxes(cs, 0, 1))
+    final_state, ys = jax.lax.scan(chunk_body, initial_state, xs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(Bb, Sp, H, Pd)[:, :S]
+    return y.astype(x.dtype), final_state

@@ -1,0 +1,121 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Grid (B, H, n_chunks) with the chunk index innermost + sequential; the
+(P x N) SSM state lives in VMEM scratch and is carried across chunk
+iterations — the TPU-native replacement for the paper-family's CUDA
+selective-scan: sequential grid + VMEM-resident state instead of
+warp-level scans.
+
+Per chunk of length L (math identical to ref.ssd):
+    y_intra[t] = sum_{s<=t} (C_t . B_s) e^{cs_t - cs_s} dt_s x_s
+    y_inter[t] = e^{cs_t} * C_t . state_in
+    state_out  = e^{cs_L} state_in + sum_t e^{cs_L - cs_t} dt_t B_t x_t^T
+
+Inputs are pre-chunked by the wrapper to (B, H, nc, L, ...) so every block
+is contiguous; B/C arrive group-expanded per head (the wrapper indexes the
+group in the BlockSpec index_map, so no materialised repeat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, L: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)               # (L, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)             # (L,)... stored (L,1)
+    dt = dt[:, 0]
+    a = a_ref[0, 0].astype(jnp.float32)                  # scalar
+    bmat = b_ref[0, 0, 0].astype(jnp.float32)            # (L, N)
+    cmat = c_ref[0, 0, 0].astype(jnp.float32)            # (L, N)
+
+    da = dt * a                                          # (L,)  <= 0
+    cs = jnp.cumsum(da)                                  # (L,)
+
+    # intra-chunk
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())))  # (L,L)
+    # clamp the (masked) upper triangle before exp: inf * 0 would be NaN
+    decay = jnp.exp(jnp.minimum(cs[:, None] - cs[None, :], 0.0))
+    tri = jnp.tril(jnp.ones((L, L), jnp.float32))
+    w = scores * decay * dt[None, :] * tri
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())))            # (L,P)
+
+    # inter-chunk
+    state = state_ref[...]                               # (P, N)
+    y += jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        cmat, state, (((1,), (1,)), ((), ())))           # (L,N)x(P,N)^T
+
+    # state update
+    tail = jnp.exp(cs[-1] - cs) * dt                     # (L,)
+    state_ref[...] = jnp.exp(cs[-1]) * state + jax.lax.dot_general(
+        x, bmat * tail[:, None], (((0,), (0,)), ((), ())))  # (P, N)
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        state_out_ref[0, 0] = state_ref[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B_mat, C_mat, *, chunk: int = 256,
+             interpret: bool = False):
+    """Pallas SSD.  Same contract as ref.ssd (zero initial state).
+
+    x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N) -> y (B,S,H,P),
+    final_state (B,H,P,N) fp32.
+    """
+    Bb, S, H, Pd = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, B_mat, C_mat = map(zf, (x, dt, B_mat, C_mat))
+    Sp = S + pad
+    nc = Sp // L
+
+    # pre-chunk to (B, H, nc, L, ...) / (B, G, nc, L, N)
+    xc = x.reshape(Bb, nc, L, H, Pd).transpose(0, 3, 1, 2, 4)
+    dtc = dt.reshape(Bb, nc, L, H).transpose(0, 3, 1, 2)[..., None]  # (B,H,nc,L,1)
+    bc = B_mat.reshape(Bb, nc, L, G, N).transpose(0, 3, 1, 2, 4)
+    cc = C_mat.reshape(Bb, nc, L, G, N).transpose(0, 3, 1, 2, 4)
+    a2 = A.reshape(H, 1)
+
+    kernel = functools.partial(_ssd_kernel, L=L, n_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, Pd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L, 1), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, 1, L, N),
+                         lambda b, h, c, r=rep: (b, h // r, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L, N),
+                         lambda b, h, c, r=rep: (b, h // r, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, L, Pd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, Pd, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, H, nc, L, Pd), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, Pd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, a2, bc, cc)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(Bb, Sp, H, Pd)[:, :S]
+    return y, state

@@ -1,0 +1,39 @@
+"""Production meshes (TPU v5e numbers) + hardware constants for roofline.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state (the dry-run sets the host-device count before
+any jax initialisation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """single-pod: (data=16, model=16) = 256 chips;
+    multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_cpu_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small host-device mesh for tests (requires the XLA host-device flag)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """TPU v5e (the dry-run/roofline target)."""
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12       # per chip
+    hbm_bandwidth: float = 819e9          # bytes/s per chip
+    ici_bandwidth: float = 50e9           # bytes/s per link
+    hbm_bytes: int = 16 * 1024 ** 3
+
+
+V5E = HardwareSpec()

@@ -1,0 +1,70 @@
+"""CPU-runnable batched serving driver: prefill + decode with KV/SSM cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m \
+      --batch 2 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.data.synthetic import make_token_stream
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import transformer as tfm
+
+
+def greedy_generate(cfg, params, prompts, gen_len: int, prefix=None):
+    """prompts: (B, S0) int32.  Returns (B, gen_len) generated ids."""
+    B, S0 = prompts.shape
+    max_seq = S0 + gen_len + (cfg.prefix_tokens or 0)
+    prefill = jax.jit(make_prefill_step(cfg, max_seq=max_seq))
+    decode = jax.jit(make_decode_step(cfg))
+    args = (params, prompts) if prefix is None else (params, prompts, prefix)
+    logits, cache = prefill(*args)
+    out = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    pos = S0 + (cfg.prefix_tokens or 0)
+    for t in range(gen_len):
+        out.append(tok[:, 0])
+        logits, cache = decode(params, tok, cache, jnp.int32(pos + t))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jnp.stack(out, axis=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="mamba2-780m")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = tfm.init_model(key, cfg)
+    prompts = jnp.asarray(make_token_stream(
+        args.batch, args.prompt_len, cfg.vocab_size, seed=args.seed))
+    prefix = None
+    if cfg.prefix_tokens:
+        rng = np.random.default_rng(args.seed)
+        prefix = jnp.asarray(rng.normal(
+            0, 1, (args.batch, cfg.prefix_tokens, cfg.prefix_dim))
+            .astype(np.float32))
+
+    t0 = time.time()
+    gen = greedy_generate(cfg, params, prompts, args.gen, prefix)
+    dt = time.time() - t0
+    print(f"arch={args.arch} generated {gen.shape} in {dt:.1f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", np.asarray(gen[0])[:16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+``input_specs(cfg, shape)`` returns (args, logical_axes) pytrees for the
+step function of that shape kind; nothing is ever allocated.  Modality
+frontends are stubs: VLM/audio archs get a precomputed embedding prefix of
+the configured size (DESIGN.md §5), with the token count reduced so the
+total sequence length equals the assigned shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.steps import decode_window
+from repro.models import transformer as tfm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def token_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Text-token count so prefix + tokens == shape.seq_len."""
+    if shape.kind == "decode":
+        return 1
+    assert shape.seq_len > cfg.prefix_tokens, (cfg.name, shape.name)
+    return shape.seq_len - cfg.prefix_tokens
+
+
+def batch_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                 n_clients: int = 0) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(specs, logical_axes) for the data inputs of a train/prefill step.
+    n_clients > 0 stacks a leading client axis (DML mode)."""
+    B = shape.global_batch
+    S = token_len(cfg, shape)
+    lead: Tuple[int, ...] = ()
+    lax_: Tuple[Optional[str], ...] = ()
+    if n_clients:
+        assert B % n_clients == 0
+        lead, lax_ = (n_clients,), ("client",)
+        B = B // n_clients
+    specs = {"tokens": SDS(lead + (B, S), jnp.int32)}
+    axes = {"tokens": lax_ + ("batch", "seq")}
+    if cfg.prefix_tokens:
+        specs["prefix"] = SDS(lead + (B, cfg.prefix_tokens, cfg.prefix_dim),
+                              cfg.cdtype())
+        axes["prefix"] = lax_ + ("batch", "seq", None)
+    return specs, axes
+
+
+def public_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                  public_batch: int) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Public mutual-learning batch (shared by all clients — replicated
+    over the client axis, sharded over data)."""
+    S = token_len(cfg, shape)
+    specs = {"public_tokens": SDS((public_batch, S), jnp.int32)}
+    axes = {"public_tokens": ("batch", "seq")}
+    if cfg.prefix_tokens:
+        specs["public_prefix"] = SDS(
+            (public_batch, cfg.prefix_tokens, cfg.prefix_dim), cfg.cdtype())
+        axes["public_prefix"] = ("batch", "seq", None)
+    return specs, axes
+
+
+def model_state_specs(cfg: ModelConfig, key=None):
+    """(param specs, param logical axes) via eval_shape — no allocation."""
+    params = jax.eval_shape(lambda: tfm.init_model(jax.random.PRNGKey(0), cfg))
+    return params, tfm.logical_axes(cfg)
+
+
+def opt_state_specs(param_specs):
+    from repro.optim import adamw_init
+    return jax.eval_shape(adamw_init, param_specs)
+
+
+def opt_logical_axes(param_axes):
+    return {"mu": param_axes, "nu": param_axes, "step": ()}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    window = decode_window(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                               window=window))
+    return cache, tfm.cache_logical_axes(cfg)

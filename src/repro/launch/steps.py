@@ -1,0 +1,52 @@
+"""Step builders shared by the CPU drivers and the multi-pod dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    remat: bool = True, window: Optional[int] = None,
+                    unroll: bool = False, ce_impl: str = "dense",
+                    slot_remat: bool = False):
+    """Single-model (non-federated) train step: CE + AdamW."""
+    def step(params, opt_state, tokens, prefix=None):
+        def loss(p):
+            return tfm.loss_fn(p, cfg, tokens, prefix, window=window,
+                               remat=remat, unroll=unroll, ce_impl=ce_impl,
+                               slot_remat=slot_remat)
+        (_, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params2, opt2, om = adamw_update(params, grads, opt_state, opt_cfg)
+        return params2, opt2, {**metrics, **om}
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int,
+                      window: Optional[int] = None, unroll: bool = False):
+    def step(params, tokens, prefix=None):
+        return tfm.prefill(params, cfg, tokens, prefix, max_seq=max_seq,
+                           window=window, unroll=unroll)
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, window: Optional[int] = None,
+                     unroll: bool = False):
+    def step(params, token, cache, pos):
+        return tfm.decode_step(params, cfg, token, cache, pos, window=window,
+                               unroll=unroll)
+    return step
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Long-context policy: dense archs use the sliding-window variant at
+    500k (DESIGN.md §5); native sub-quadratic archs keep their own setting."""
+    if shape.name == "long_500k" and cfg.long_context_variant == "sliding_window":
+        return cfg.long_context_window
+    return cfg.sliding_window

@@ -1,0 +1,103 @@
+"""CPU-runnable training driver (reduced configs) — the end-to-end path.
+
+Single-model pretraining or federated DML across K clients on synthetic
+bigram streams.  The same step builders are what the dry-run lowers for the
+production mesh, so this driver doubles as the integration test of the
+whole stack.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
+      --method dml --clients 3 --steps 12
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import ARCH_IDS, get_reduced
+from repro.core import distributed as dml
+from repro.data.synthetic import make_token_stream
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tfm
+from repro.optim import AdamWConfig, adamw_init
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
+    ap.add_argument("--method", choices=["single", "dml"], default="single")
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--kl-weight", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None, help="checkpoint path")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup=5, total_steps=args.steps)
+    key = jax.random.PRNGKey(args.seed)
+
+    def batch_for(domain: int, step: int, batch: int):
+        toks = make_token_stream(batch, args.seq + 1, cfg.vocab_size,
+                                 seed=1000 * step + args.seed, domain=domain)
+        out = [jnp.asarray(toks[:, :args.seq])]
+        if cfg.prefix_tokens:
+            rng = np.random.default_rng(step)
+            out.append(jnp.asarray(rng.normal(
+                0, 1, (batch, cfg.prefix_tokens, cfg.prefix_dim))
+                .astype(np.float32)))
+        return out
+
+    t0 = time.time()
+    if args.method == "single":
+        params = tfm.init_model(key, cfg)
+        opt = adamw_init(params)
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+        for i in range(args.steps):
+            params, opt, m = step_fn(params, opt, *batch_for(0, i, args.batch))
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} ce={float(m['ce']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.2f}", flush=True)
+        final = params
+    else:
+        K = args.clients
+        params = dml.stacked_init(key, cfg, K)
+        opt = dml.stacked_adamw_init(params)
+        step_fn = jax.jit(dml.make_dml_train_step(
+            cfg, opt_cfg, kl_weight=args.kl_weight))
+        for i in range(args.steps):
+            priv = [batch_for(d, i, args.batch) for d in range(K)]
+            tokens = jnp.stack([b[0] for b in priv])
+            pub = batch_for(K, 10_000 + i, max(1, args.batch // 2))
+            fa = (tokens, pub[0])
+            if cfg.prefix_tokens:
+                fa = (tokens, pub[0],
+                      jnp.stack([b[1] for b in priv]), pub[1])
+            params, opt, m = step_fn(params, opt, *fa)
+            if i % 5 == 0 or i == args.steps - 1:
+                pl_ = np.asarray(m["private_loss"])
+                kl = np.asarray(m["kld_avg"])
+                print(f"step {i:4d} private={pl_.mean():.4f} "
+                      f"kld_avg={kl.mean():.5f} spread={pl_.std():.4f}",
+                      flush=True)
+        final = params
+
+    print(f"done in {time.time() - t0:.1f}s")
+    if args.save:
+        checkpoint.save(args.save, final,
+                        {"arch": args.arch, "method": args.method,
+                         "steps": args.steps})
+        print(f"saved checkpoint to {args.save}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

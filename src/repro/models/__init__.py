@@ -1,0 +1,2 @@
+"""Model zoo: shared decoder backbone + the paper's VisionNet CNN."""
+from repro.models import transformer, visionnet  # noqa: F401

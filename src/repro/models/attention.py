@@ -1,0 +1,166 @@
+"""GQA attention block: train/prefill forward + ring-buffer KV-cache decode.
+
+Features (per assigned architectures): grouped KV heads, optional per-head
+qk RMS-norm (qwen3), optional QKV bias (qwen1.5), optional sliding window
+(mistral / long-context variants).  The KV cache is a ring buffer of size
+min(max_seq, window): sliding-window decode at 500k context stores only the
+window.  Absolute positions are cached alongside K/V so RoPE'd keys stay
+valid after wrap-around.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.sharding import constrain
+
+
+def init_attention(key, cfg: ModelConfig):
+    hd = cfg.head_dim_
+    n_qkv = cfg.n_heads + 2 * cfg.n_kv_heads
+    keys = jax.random.split(key, 3)
+    p = {
+        "w_qkv": dense_init(keys[0], (cfg.d_model, n_qkv, hd), cfg.pdtype()),
+        "w_o": dense_init(keys[1], (cfg.n_heads, hd, cfg.d_model), cfg.pdtype(),
+                          scale=(cfg.n_heads * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["b_qkv"] = jnp.zeros((n_qkv, hd), cfg.pdtype())
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.pdtype())
+        p["k_norm"] = jnp.zeros((hd,), cfg.pdtype())
+    return p
+
+
+def attention_logical_axes(cfg: ModelConfig):
+    ax = {"w_qkv": ("embed", "heads", "head_dim"),
+          "w_o": ("heads", "head_dim", "embed")}
+    if cfg.qkv_bias:
+        ax["b_qkv"] = ("heads", "head_dim")
+    if cfg.qk_norm:
+        ax["q_norm"] = ("head_dim",)
+        ax["k_norm"] = ("head_dim",)
+    return ax
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    qkv = jnp.einsum("bsd,dnh->bsnh", x, params["w_qkv"])
+    if cfg.qkv_bias:
+        qkv = qkv + params["b_qkv"]
+    q = qkv[:, :, : cfg.n_heads]
+    k = qkv[:, :, cfg.n_heads: cfg.n_heads + cfg.n_kv_heads]
+    v = qkv[:, :, cfg.n_heads + cfg.n_kv_heads:]
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_forward(params, cfg: ModelConfig, x, positions=None,
+                      window: Optional[int] = None):
+    """Self-attention over x (B, S, d).  window=None -> cfg.sliding_window."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if window is None:
+        window = cfg.sliding_window
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = constrain(q, "attn_batch", "seq", "heads", None)
+    k = constrain(k, "attn_batch", "seq", "kv_heads", None)
+    v = constrain(v, "attn_batch", "seq", "kv_heads", None)
+    out = ops.attention(q, k, v, causal=True, window=window)
+    out = constrain(out, "attn_batch", "seq", "heads", None)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["w_o"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  window: Optional[int] = None, dtype=None):
+    """Ring-buffer cache for ONE attention layer."""
+    dtype = dtype or cfg.cdtype()
+    size = max_seq if window is None else min(window, max_seq)
+    hd = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def kv_cache_logical_axes():
+    return {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "pos": ("batch", "kv_seq")}
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache, pos,
+                     window: Optional[int] = None):
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 (tokens so far).
+
+    Returns (y (B, 1, d), updated cache).
+    """
+    B = x.shape[0]
+    if window is None:
+        window = cfg.sliding_window
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    size = cache["k"].shape[1]
+    slot = (pos % size).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    pos_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), slot, axis=1)
+    k_cache = constrain(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = constrain(v_cache, "batch", "kv_seq", "kv_heads", None)
+
+    out = ops.attention(q, k_cache, v_cache, causal=True, window=window,
+                        positions_q=positions, positions_k=pos_cache)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["w_o"])
+    return y, {"k": k_cache, "v": v_cache, "pos": pos_cache}
+
+
+def attention_prefill(params, cfg: ModelConfig, x, cache,
+                      window: Optional[int] = None):
+    """Prompt ingestion: full self-attention + cache write.
+
+    x: (B, S, d).  Fills the (ring) cache with the last ``size`` positions.
+    Returns (y (B, S, d), cache).
+    """
+    B, S, _ = x.shape
+    if window is None:
+        window = cfg.sliding_window
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = constrain(q, "attn_batch", "seq", "heads", None)
+    out = ops.attention(q, k, v, causal=True, window=window)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["w_o"])
+
+    size = cache["k"].shape[1]
+    if S >= size:
+        # keep the trailing window; ring slot of absolute position p is p % size
+        tail_pos = jnp.arange(S - size, S)
+        shift = (S - size) % size if size else 0
+        roll = lambda a: jnp.roll(a, shift=shift, axis=1)
+        k_keep = roll(k[:, S - size:].astype(cache["k"].dtype))
+        v_keep = roll(v[:, S - size:].astype(cache["v"].dtype))
+        p_keep = roll(jnp.broadcast_to(tail_pos, (B, size)).astype(jnp.int32))
+        cache = {"k": k_keep, "v": v_keep, "pos": p_keep}
+    else:
+        k_cache = cache["k"].at[:, :S].set(k.astype(cache["k"].dtype))
+        v_cache = cache["v"].at[:, :S].set(v.astype(cache["v"].dtype))
+        p_cache = cache["pos"].at[:, :S].set(positions.astype(jnp.int32))
+        cache = {"k": k_cache, "v": v_cache, "pos": p_cache}
+    cache = {"k": constrain(cache["k"], "batch", "kv_seq", "kv_heads", None),
+             "v": constrain(cache["v"], "batch", "kv_seq", "kv_heads", None),
+             "pos": cache["pos"]}
+    return y, cache

@@ -1,0 +1,114 @@
+"""Capacity-based top-k mixture-of-experts FFN (expert-parallel friendly).
+
+Routing uses the Switch/GShard dispatch-einsum formulation with a *group*
+dimension: tokens are routed within groups of ``group_size`` so the dispatch
+tensors stay small (dispatch FLOPs ~= top_k * group * cf * d per token,
+~1% of expert FLOPs at group=256).  With the expert dim sharded over the
+``model`` mesh axis the dispatch einsums lower to all-to-alls — the TPU
+analogue of expert-parallel NCCL a2a.
+
+Aux losses: Switch load-balance loss + router z-loss, returned for the train
+loss to consume.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding import constrain
+
+GROUP_SIZE = 256
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    keys = jax.random.split(key, 5)
+    d, de, E = cfg.d_model, m.d_expert, m.n_experts
+    p = {
+        "router": dense_init(keys[0], (d, E), jnp.float32, scale=d ** -0.5),
+        "w_gate": dense_init(keys[1], (E, d, de), cfg.pdtype()),
+        "w_up": dense_init(keys[2], (E, d, de), cfg.pdtype()),
+        "w_down": dense_init(keys[3], (E, de, d), cfg.pdtype()),
+    }
+    if m.n_shared_experts:
+        ds = m.n_shared_experts * de
+        ks = jax.random.split(keys[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks[0], (d, ds), cfg.pdtype()),
+            "w_up": dense_init(ks[1], (d, ds), cfg.pdtype()),
+            "w_down": dense_init(ks[2], (ds, d), cfg.pdtype()),
+        }
+    return p
+
+
+def moe_logical_axes(cfg: ModelConfig):
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("expert", "embed", "ff"),
+        "w_up": ("expert", "embed", "ff"),
+        "w_down": ("expert", "ff", "embed"),
+    }
+    if cfg.moe.n_shared_experts:
+        ax["shared"] = {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                        "w_down": ("ff", "embed")}
+    return ax
+
+
+def apply_moe(params, cfg: ModelConfig, x) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (y, aux).  aux: load_balance, router_z (scalars)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    G = min(GROUP_SIZE, S)
+    assert S % G == 0, (S, G)
+    ng = S // G
+    xg = x.reshape(B * ng, G, d)
+    N = B * ng
+
+    logits = (xg.astype(jnp.float32) @ params["router"])          # (N,G,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                      # (N,G,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # capacity-based dispatch
+    C = math.ceil(k * G * m.capacity_factor / E)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)            # (N,G,k,E)
+    flat = onehot.reshape(N, G * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1.0                          # (N,G*k,E)
+    pos = (pos * flat).reshape(N, G, k, E)
+    keep = (pos < C).astype(jnp.float32) * onehot
+    # dispatch (N,G,E,C): token -> (expert, slot)
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+    dispatch = jnp.einsum("ngke,ngkec->ngec", keep, slot_oh)
+    combine = jnp.einsum("ngke,ngkec->ngec", keep * gate_vals[..., None], slot_oh)
+
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xg.astype(jnp.float32))
+    # the group dim N = B*S/G MUST stay batch-sharded: leaving it
+    # unconstrained made SPMD replicate expert compute across the data axis
+    # (16x redundant FLOPs — dbrx useful_flop_ratio 0.11, see §Perf)
+    xe = constrain(xe.astype(x.dtype), "batch", "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", xe, params["w_gate"])) * \
+        jnp.einsum("necd,edf->necf", xe, params["w_up"])
+    h = constrain(h, "batch", "expert", None, "ff")
+    ye = jnp.einsum("necf,efd->necd", h, params["w_down"])
+    ye = constrain(ye, "batch", "expert", None, None)
+    y = jnp.einsum("necd,ngec->ngd", ye.astype(jnp.float32), combine)
+    y = y.reshape(B, S, d).astype(x.dtype)
+
+    if m.n_shared_experts:
+        sp = params["shared"]
+        hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+
+    # aux losses (fp32 scalars)
+    density = jnp.mean(onehot.sum(axis=2), axis=(0, 1))           # f_e
+    mean_prob = jnp.mean(probs, axis=(0, 1))                      # P_e
+    load_balance = E * jnp.sum(density * mean_prob) * m.aux_coef
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_coef
+    return y, {"load_balance": load_balance, "router_z": router_z}

@@ -1,0 +1,159 @@
+"""Mamba2 block (SSD) — train/prefill forward and single-step decode.
+
+Block layout follows the Mamba2 paper: fused in_proj -> (z, xBC, dt),
+causal depthwise conv over xBC, SiLU, SSD scan over heads, D skip,
+gated RMSNorm, out_proj.  Decode carries (conv_state, ssm_state) —
+constant-size state, which is why SSM archs run long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init, gated_rms_norm
+from repro.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return s, di, nh, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig):
+    s, di, nh, conv_ch = _dims(cfg)
+    keys = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * s.n_groups * s.d_state + nh
+    dt = jnp.exp(jax.random.uniform(keys[2], (nh,)) *
+                 (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    # store softplus^-1(dt)
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(keys[0], (cfg.d_model, d_in_proj), cfg.pdtype()),
+        "conv_w": dense_init(keys[1], (s.d_conv, conv_ch), cfg.pdtype(),
+                             scale=s.d_conv ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), cfg.pdtype()),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": jnp.zeros((di,), cfg.pdtype()),
+        "out_proj": dense_init(keys[3], (di, cfg.d_model), cfg.pdtype()),
+    }
+
+
+def mamba_logical_axes(cfg: ModelConfig):
+    return {
+        "in_proj": ("embed", "ff"),
+        "conv_w": ("conv", None),
+        "conv_b": (None,),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": ("ff",),
+        "out_proj": ("ff", "embed"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s, di, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: 2 * di + 2 * gn]
+    dt = zxbcdt[..., 2 * di + 2 * gn:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv.  xBC: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba_forward(params, cfg: ModelConfig, u, return_state: bool = False):
+    """u: (B, S, d) -> y (B, S, d) [, (conv_state, ssm_state)]."""
+    s, di, nh, conv_ch = _dims(cfg)
+    B, S, _ = u.shape
+    zxbcdt = u @ params["in_proj"]
+    zxbcdt = constrain(zxbcdt, "batch", "seq", "ff")
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xBC_act = jax.nn.silu(xBC_conv)
+    gn = s.n_groups * s.d_state
+    # explicit re-shard of the slices: x stays head-sharded; the small B/C
+    # group projections replicate (they feed every head) — without these
+    # constraints SPMD all-gathers the whole ff-sharded xBC per layer
+    x = xBC_act[..., :di].reshape(B, S, nh, s.head_dim)
+    Bm = xBC_act[..., di: di + gn].reshape(B, S, s.n_groups, s.d_state)
+    Cm = xBC_act[..., di + gn:].reshape(B, S, s.n_groups, s.d_state)
+    Bm = constrain(Bm, "batch", "seq", None, None)
+    Cm = constrain(Cm, "batch", "seq", None, None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    x = constrain(x, "batch", "seq", "heads", None)
+    y, state = ops.ssd(x, dt, A, Bm, Cm, chunk=s.chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * x
+    y = y.reshape(B, S, di)
+    y = gated_rms_norm(y, z, params["norm"], cfg.rms_eps)
+    out = y @ params["out_proj"]
+    if not return_state:
+        return out
+    conv_state = xBC[:, S - (s.d_conv - 1):, :] if S >= s.d_conv - 1 else \
+        jnp.pad(xBC, ((0, 0), (s.d_conv - 1 - S, 0), (0, 0)))
+    return out, (conv_state.astype(cfg.cdtype()), state)
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None):
+    s, di, nh, conv_ch = _dims(cfg)
+    dtype = dtype or cfg.cdtype()
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba_cache_logical_axes():
+    return {"conv": ("batch", None, "ff"),
+            "ssm": ("batch", "heads", None, "state")}
+
+
+def mamba_decode(params, cfg: ModelConfig, u, cache) -> Tuple[jax.Array, dict]:
+    """One token: u (B, 1, d) -> (y (B, 1, d), cache)."""
+    s, di, nh, conv_ch = _dims(cfg)
+    B = u.shape[0]
+    zxbcdt = u @ params["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)                 # (B,1,*)
+    window = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xBC_act = jax.nn.silu(conv_out)[:, None, :].astype(u.dtype)  # (B,1,C)
+    gn = s.n_groups * s.d_state
+    x = xBC_act[..., :di].reshape(B, nh, s.head_dim)
+    Bm = xBC_act[..., di: di + gn].reshape(B, s.n_groups, s.d_state)
+    Cm = xBC_act[..., di + gn:].reshape(B, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,nh,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtv * A)                              # (B,nh)
+    xf = x.astype(jnp.float32)
+    ssm = cache["ssm"] * decay[:, :, None, None] + \
+        jnp.einsum("bhn,bhp,bh->bhpn", Bh, xf, dtv)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, ssm) + params["D"][None, :, None] * xf
+    y = y.reshape(B, 1, di).astype(u.dtype)
+    y = gated_rms_norm(y, z, params["norm"], cfg.rms_eps)
+    out = y @ params["out_proj"]
+    new_cache = {"conv": window[:, 1:, :].astype(cache["conv"].dtype),
+                 "ssm": ssm}
+    return out, new_cache

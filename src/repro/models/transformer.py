@@ -1,0 +1,415 @@
+"""Decoder backbone assembling attention / Mamba / MLP / MoE slots.
+
+Layers are organised as ``n_periods`` repetitions of ``cfg.period`` (the
+repeating unit: 1 slot for dense/MoE/SSM models, 8 for Jamba's 1:7 hybrid).
+Period parameters are stacked on a leading axis and the stack is traversed
+with ``lax.scan`` so 80-layer models lower to compact HLO; the period body
+is optionally ``jax.checkpoint``-ed (activation remat).
+
+Modes:
+  - forward / loss:   training and the faithful-reproduction path
+  - prefill:          prompt ingestion -> (last-token logits, cache)
+  - decode_step:      one token against the cache (KV ring / SSM state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, dense_init, embed_init, init_mlp,
+                                 mlp_logical_axes, rms_norm)
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+
+def _init_slot(key, cfg: ModelConfig, spec):
+    keys = jax.random.split(key, 2)
+    p: Params = {"norm1": jnp.zeros((cfg.d_model,), cfg.pdtype())}
+    if spec.mixer == "attn":
+        p["mixer"] = attn_mod.init_attention(keys[0], cfg)
+    else:
+        p["mixer"] = ssm_mod.init_mamba(keys[0], cfg)
+    if spec.ffn != "none":
+        p["norm2"] = jnp.zeros((cfg.d_model,), cfg.pdtype())
+        if spec.ffn == "mlp":
+            p["ffn"] = init_mlp(keys[1], cfg.d_model, cfg.d_ff, cfg.pdtype())
+        else:
+            p["ffn"] = moe_mod.init_moe(keys[1], cfg)
+    return p
+
+
+def _init_period(key, cfg: ModelConfig):
+    keys = jax.random.split(key, len(cfg.period))
+    return {f"slot{i}": _init_slot(keys[i], cfg, spec)
+            for i, spec in enumerate(cfg.period)}
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    k_embed, k_periods, k_head, k_proj = jax.random.split(key, 4)
+    params: Params = {
+        "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), cfg.pdtype()),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype()),
+    }
+    period_keys = jax.random.split(k_periods, cfg.n_periods)
+    params["periods"] = jax.vmap(
+        functools.partial(_init_period, cfg=cfg))(period_keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                       cfg.pdtype())
+    if cfg.prefix_tokens:
+        params["projector"] = {
+            "w": dense_init(k_proj, (cfg.prefix_dim, cfg.d_model), cfg.pdtype()),
+            "b": jnp.zeros((cfg.d_model,), cfg.pdtype()),
+        }
+    return params
+
+
+def _slot_logical_axes(cfg: ModelConfig, spec):
+    ax: Params = {"norm1": ("embed_act",)}
+    if spec.mixer == "attn":
+        ax["mixer"] = attn_mod.attention_logical_axes(cfg)
+    else:
+        ax["mixer"] = ssm_mod.mamba_logical_axes(cfg)
+    if spec.ffn != "none":
+        ax["norm2"] = ("embed_act",)
+        ax["ffn"] = (mlp_logical_axes() if spec.ffn == "mlp"
+                     else moe_mod.moe_logical_axes(cfg))
+    return ax
+
+
+def logical_axes(cfg: ModelConfig) -> Params:
+    """Pytree of logical-axis tuples parallel to ``init_model``'s output."""
+    period_ax = {f"slot{i}": _slot_logical_axes(cfg, spec)
+                 for i, spec in enumerate(cfg.period)}
+    # add the stacked 'layers' axis on every period leaf
+    period_ax = jax.tree.map(
+        lambda t: ("layers",) + t, period_ax,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict))
+    ax: Params = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed_act",),
+        "periods": period_ax,
+    }
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("embed", "vocab")
+    if cfg.prefix_tokens:
+        ax["projector"] = {"w": (None, "embed"), "b": ("embed_act",)}
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval)
+
+def _apply_slot(params, cfg: ModelConfig, spec, x, positions,
+                window: Optional[int]):
+    aux = {"load_balance": jnp.zeros((), jnp.float32),
+           "router_z": jnp.zeros((), jnp.float32)}
+    h = rms_norm(x, params["norm1"], cfg.rms_eps)
+    if spec.mixer == "attn":
+        h = attn_mod.attention_forward(params["mixer"], cfg, h, positions,
+                                       window=window)
+    else:
+        h = ssm_mod.mamba_forward(params["mixer"], cfg, h)
+    x = x + h
+    if spec.ffn != "none":
+        h = rms_norm(x, params["norm2"], cfg.rms_eps)
+        if spec.ffn == "mlp":
+            h = apply_mlp(params["ffn"], h)
+        else:
+            h, aux = moe_mod.apply_moe(params["ffn"], cfg, h)
+        x = x + h
+    x = constrain(x, "batch", "res_seq", "embed_act")
+    return x, aux
+
+
+def _embed(params, cfg: ModelConfig, tokens, prefix_emb):
+    x = params["embed"].astype(cfg.cdtype())[tokens]
+    if cfg.prefix_tokens:
+        proj = (prefix_emb.astype(cfg.cdtype()) @ params["projector"]["w"]
+                + params["projector"]["b"]).astype(x.dtype)
+        x = jnp.concatenate([proj, x], axis=1)
+    return constrain(x, "batch", "res_seq", "embed_act")
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
+                   window: Optional[int] = None, remat: bool = True,
+                   unroll: bool = False, slot_remat: bool = False):
+    """Backbone only: final hidden states (pre final-norm) + aux losses.
+    ``unroll`` replaces the period scan with a Python loop (exact HLO cost
+    accounting in the dry-run — see launch/dryrun.py).  ``slot_remat``
+    checkpoints every slot individually (multi-slot periods like Jamba's
+    8-layer block otherwise keep the whole period's activations live in
+    the backward pass)."""
+    x = _embed(params, cfg, tokens, prefix_emb)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def period_body(carry, period_params):
+        h = carry
+        aux_tot = {"load_balance": jnp.zeros((), jnp.float32),
+                   "router_z": jnp.zeros((), jnp.float32)}
+        for i, spec in enumerate(cfg.period):
+            def slot_fn(p, hh, spec=spec):
+                return _apply_slot(p, cfg, spec, hh, positions, window)
+            if slot_remat:
+                slot_fn = jax.checkpoint(slot_fn)
+            h, aux = slot_fn(period_params[f"slot{i}"], h)
+            aux_tot = jax.tree.map(jnp.add, aux_tot, aux)
+        return h, aux_tot
+
+    body = (jax.checkpoint(period_body) if (remat and not slot_remat)
+            else period_body)
+    if unroll:
+        aux = {"load_balance": jnp.zeros((), jnp.float32),
+               "router_z": jnp.zeros((), jnp.float32)}
+        for idx in range(cfg.n_periods):
+            pp = jax.tree.map(lambda t, idx=idx: t[idx], params["periods"])
+            x, a = body(x, pp)
+            aux = jax.tree.map(jnp.add, aux, a)
+    else:
+        x, auxs = jax.lax.scan(body, x, params["periods"])
+        aux = jax.tree.map(jnp.sum, auxs)
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
+            window: Optional[int] = None, remat: bool = True,
+            unroll: bool = False, slot_remat: bool = False):
+    """tokens: (B, S_tok); prefix_emb: (B, P, prefix_dim) when cfg.prefix_tokens.
+
+    Returns (logits (B, P+S_tok, V), aux dict of scalar reg losses).
+    """
+    x, aux = forward_hidden(params, cfg, tokens, prefix_emb, window=window,
+                            remat=remat, unroll=unroll,
+                            slot_remat=slot_remat)
+    return _unembed(params, cfg, x), aux
+
+
+def chunked_ce(x, head, labels, n_chunks: int = 16):
+    """Cross-entropy WITHOUT materialising the (B, S, V) logits tensor.
+
+    x: (B, S, d) final hidden states; head: (d, V); labels: (B, S).
+    lax.scan over vocab chunks with a running (max, sumexp, label-logit)
+    carry; the chunk body is checkpointed so backward recomputes the chunk
+    logits instead of saving them.  Peak activation: (B, S, V/n_chunks).
+    """
+    B, S, d = x.shape
+    V = head.shape[1]
+    c = -(-V // n_chunks)
+    pad = n_chunks * c - V
+    headp = jnp.pad(head, ((0, 0), (0, pad)))
+    chunks = headp.reshape(d, n_chunks, c).transpose(1, 0, 2)   # (n,d,c)
+    xf = x.astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m, se, lab = carry
+        w, idx = inp                                   # (d,c), chunk index
+        lg = (xf @ w.astype(jnp.float32))              # (B,S,c)
+        base = idx * c
+        valid = base + jnp.arange(c) < V
+        lg = jnp.where(valid[None, None, :], lg, -1e30)
+        m_new = jnp.maximum(m, jnp.max(lg, axis=-1))
+        se = se * jnp.exp(m - m_new) + jnp.sum(jnp.exp(lg - m_new[..., None]),
+                                               axis=-1)
+        local = labels - base
+        inside = (local >= 0) & (local < c)
+        picked = jnp.take_along_axis(lg, jnp.clip(local, 0, c - 1)[..., None],
+                                     axis=-1)[..., 0]
+        lab = jnp.where(inside, picked, lab)
+        return (m_new, se, lab), None
+
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    se0 = jnp.zeros((B, S), jnp.float32)
+    lab0 = jnp.full((B, S), -1e30, jnp.float32)
+    (m, se, lab), _ = jax.lax.scan(body, (m0, se0, lab0),
+                                   (chunks, jnp.arange(n_chunks)))
+    lse = m + jnp.log(se)
+    return jnp.mean(lse - lab)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
+            window: Optional[int] = None, remat: bool = True,
+            unroll: bool = False, ce_impl: str = "dense",
+            slot_remat: bool = False):
+    """Next-token cross-entropy (+ MoE aux).  Returns (loss, metrics).
+
+    ce_impl='chunked' streams the vocab dimension (never materialises the
+    (B, S, V) logits) — the beyond-paper memory optimisation from §Perf.
+    """
+    P = cfg.prefix_tokens if cfg.prefix_tokens else 0
+    if ce_impl == "chunked":
+        x, aux = forward_hidden(params, cfg, tokens, prefix_emb,
+                                window=window, remat=remat, unroll=unroll,
+                                slot_remat=slot_remat)
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        if P:
+            xs, labels = x[:, P - 1: -1], tokens
+        else:
+            xs, labels = x[:, :-1], tokens[:, 1:]
+        ce = chunked_ce(xs, head, labels)
+    else:
+        logits, aux = forward(params, cfg, tokens, prefix_emb, window=window,
+                              remat=remat, unroll=unroll,
+                              slot_remat=slot_remat)
+        if P:
+            pred = logits[:, P - 1: -1]      # positions predicting tokens[0:]
+            labels = tokens
+        else:
+            pred = logits[:, :-1]
+            labels = tokens[:, 1:]
+        logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+        ce = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(ce)
+    total = ce + aux["load_balance"] + aux["router_z"]
+    return total, {"ce": ce, **aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+
+def _slot_cache(cfg: ModelConfig, spec, batch: int, max_seq: int,
+                window: Optional[int]):
+    if spec.mixer == "attn":
+        return attn_mod.init_kv_cache(cfg, batch, max_seq, window)
+    return ssm_mod.init_mamba_cache(cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               window: Optional[int] = None) -> Params:
+    """Stacked (n_periods leading axis) cache pytree."""
+    if window is None:
+        window = cfg.sliding_window
+    one = {f"slot{i}": _slot_cache(cfg, spec, batch, max_seq, window)
+           for i, spec in enumerate(cfg.period)}
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t, (cfg.n_periods,) + t.shape).copy(), one)
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Params:
+    one = {}
+    for i, spec in enumerate(cfg.period):
+        if spec.mixer == "attn":
+            one[f"slot{i}"] = attn_mod.kv_cache_logical_axes()
+        else:
+            one[f"slot{i}"] = ssm_mod.mamba_cache_logical_axes()
+    return jax.tree.map(
+        lambda t: ("layers",) + t, one,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict))
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
+            max_seq: int, window: Optional[int] = None,
+            unroll: bool = False):
+    """Prompt ingestion.  Returns (last-token logits (B, V), cache)."""
+    if window is None:
+        window = cfg.sliding_window
+    x = _embed(params, cfg, tokens, prefix_emb)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def period_body(carry, period_params):
+        h = carry
+        caches = {}
+        for i, spec in enumerate(cfg.period):
+            sp = period_params[f"slot{i}"]
+            hin = rms_norm(h, sp["norm1"], cfg.rms_eps)
+            if spec.mixer == "attn":
+                cache = attn_mod.init_kv_cache(cfg, B, max_seq, window)
+                out, cache = attn_mod.attention_prefill(sp["mixer"], cfg, hin,
+                                                        cache, window=window)
+            else:
+                out, (conv, ssm_state) = ssm_mod.mamba_forward(
+                    sp["mixer"], cfg, hin, return_state=True)
+                cache = {"conv": conv, "ssm": ssm_state}
+            h = h + out
+            if spec.ffn != "none":
+                hin = rms_norm(h, sp["norm2"], cfg.rms_eps)
+                if spec.ffn == "mlp":
+                    hin = apply_mlp(sp["ffn"], hin)
+                else:
+                    hin, _ = moe_mod.apply_moe(sp["ffn"], cfg, hin)
+                h = h + hin
+            h = constrain(h, "batch", "res_seq", "embed_act")
+            caches[f"slot{i}"] = cache
+        return h, caches
+
+    if unroll:
+        caches = []
+        for idx in range(cfg.n_periods):
+            pp = jax.tree.map(lambda t, idx=idx: t[idx], params["periods"])
+            x, c = period_body(x, pp)
+            caches.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, caches = jax.lax.scan(period_body, x, params["periods"])
+    logits = _unembed(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, *,
+                window: Optional[int] = None, unroll: bool = False):
+    """One decode step.  token: (B, 1) int32; pos: scalar int32.
+
+    Returns (logits (B, V), new cache).
+    """
+    if window is None:
+        window = cfg.sliding_window
+    x = params["embed"].astype(cfg.cdtype())[token]       # (B,1,d)
+
+    def period_body(carry, xs):
+        h = carry
+        period_params, cache_in = xs
+        cache_out = {}
+        for i, spec in enumerate(cfg.period):
+            sp = period_params[f"slot{i}"]
+            hin = rms_norm(h, sp["norm1"], cfg.rms_eps)
+            if spec.mixer == "attn":
+                out, c = attn_mod.attention_decode(sp["mixer"], cfg, hin,
+                                                   cache_in[f"slot{i}"], pos,
+                                                   window=window)
+            else:
+                out, c = ssm_mod.mamba_decode(sp["mixer"], cfg, hin,
+                                              cache_in[f"slot{i}"])
+            h = h + out
+            if spec.ffn != "none":
+                hin = rms_norm(h, sp["norm2"], cfg.rms_eps)
+                if spec.ffn == "mlp":
+                    hin = apply_mlp(sp["ffn"], hin)
+                else:
+                    hin, _ = moe_mod.apply_moe(sp["ffn"], cfg, hin)
+                h = h + hin
+            cache_out[f"slot{i}"] = c
+        return h, cache_out
+
+    if unroll:
+        new_caches = []
+        for idx in range(cfg.n_periods):
+            sel = lambda t, idx=idx: t[idx]
+            x, c = period_body(x, (jax.tree.map(sel, params["periods"]),
+                                   jax.tree.map(sel, cache)))
+            new_caches.append(c)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+    else:
+        x, new_cache = jax.lax.scan(period_body, x, (params["periods"], cache))
+    logits = _unembed(params, cfg, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,93 @@
+"""VisionNet — the paper's CNN (Fig. 2), in pure JAX.
+
+Three 3x3 conv layers (first two followed by 2x2 max-pool), dropout,
+dense-64, dropout, single sigmoid output (binary face-mask head).  The
+paper's asynchronous-FL baseline needs a shallow/deep split: conv stack =
+"shallow", dense head = "deep" (matching [4]'s layerwise schedule).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.visionnet import VisionNetConfig
+
+
+def init_visionnet(key, cfg: VisionNetConfig) -> Dict:
+    keys = jax.random.split(key, len(cfg.conv_features) + 2)
+    params: Dict = {"conv": []}
+    c_in = cfg.channels
+    size = cfg.image_size
+    for i, c_out in enumerate(cfg.conv_features):
+        fan_in = cfg.kernel_size * cfg.kernel_size * c_in
+        w = jax.random.truncated_normal(
+            keys[i], -2, 2, (cfg.kernel_size, cfg.kernel_size, c_in, c_out)
+        ) * (2.0 / fan_in) ** 0.5
+        params["conv"].append({"w": w.astype(jnp.float32),
+                               "b": jnp.zeros((c_out,), jnp.float32)})
+        c_in = c_out
+        if i < 2:                                    # first two convs pooled
+            size //= 2
+    flat = size * size * c_in
+    params["dense"] = {
+        "w": (jax.random.truncated_normal(keys[-2], -2, 2,
+                                          (flat, cfg.dense_features))
+              * (2.0 / flat) ** 0.5).astype(jnp.float32),
+        "b": jnp.zeros((cfg.dense_features,), jnp.float32),
+    }
+    params["head"] = {
+        "w": (jax.random.truncated_normal(keys[-1], -2, 2,
+                                          (cfg.dense_features, cfg.n_classes))
+              * (1.0 / cfg.dense_features) ** 0.5).astype(jnp.float32),
+        "b": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+    return params
+
+
+def shallow_deep_split(params: Dict):
+    """Param-path masks for the async-FL baseline: conv = shallow, rest = deep."""
+    shallow = jax.tree.map(lambda _: False, params)
+    shallow["conv"] = jax.tree.map(lambda _: True, params["conv"])
+    return shallow
+
+
+def _conv2d(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _max_pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def visionnet_forward(params: Dict, cfg: VisionNetConfig, images,
+                      *, train: bool = False,
+                      dropout_key: Optional[jax.Array] = None):
+    """images: (B, H, W, C) in [0, 1].  Returns sigmoid-prob (B,) fp32."""
+    x = images.astype(jnp.float32)
+    for i, cp in enumerate(params["conv"]):
+        x = jax.nn.relu(_conv2d(x, cp["w"], cp["b"]))
+        if i < 2:
+            x = _max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    if train and dropout_key is not None:
+        k1, k2 = jax.random.split(dropout_key)
+        keep = 1.0 - cfg.dropout_rate
+        x = x * jax.random.bernoulli(k1, keep, x.shape) / keep
+    x = jax.nn.relu(x @ params["dense"]["w"] + params["dense"]["b"])
+    if train and dropout_key is not None:
+        x = x * jax.random.bernoulli(k2, keep, x.shape) / keep
+    logits = x @ params["head"]["w"] + params["head"]["b"]
+    return jax.nn.sigmoid(logits[:, 0])
+
+
+def bce_loss(probs, labels, eps: float = 1e-7):
+    """Binary cross-entropy on sigmoid outputs (paper's Model_loss)."""
+    p = jnp.clip(probs, eps, 1 - eps)
+    y = labels.astype(jnp.float32)
+    return -jnp.mean(y * jnp.log(p) + (1 - y) * jnp.log(1 - p))

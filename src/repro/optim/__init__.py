@@ -1,0 +1,143 @@
+"""Optimizers + schedules (minimal optax-style, pure JAX).
+
+AdamW with decoupled weight decay + global-norm clipping for the LLM path;
+SGD-momentum for the VisionNet reproduction (matching the paper's small-CNN
+setting).  State is a plain pytree so it checkpoints/shards like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# schedules
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (final_frac + (1 - final_frac) *
+                         0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float) -> Callable:
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# gradient transforms
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # or "constant"
+
+    def make_schedule(self) -> Callable:
+        if self.schedule == "cosine":
+            return cosine_schedule(self.lr, self.warmup, self.total_steps)
+        return constant_schedule(self.lr)
+
+
+def adamw_init(params: Params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _wd_mask(path: tuple) -> bool:
+    """Decay matrices only — skip norms/biases/scalars (standard practice)."""
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    skip = ("norm", "bias", "b_qkv", "A_log", "D", "dt_bias", "conv_b", "b")
+    return not any(str(n) in skip or "norm" in str(n) for n in names)
+
+
+def adamw_update(params: Params, grads: Params, state: dict,
+                 cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    lr = cfg.make_schedule()(step)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                      jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(path, p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay and _wd_mask(path):
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (VisionNet path)
+
+@dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.05
+    momentum: float = 0.9
+    clip_norm: Optional[float] = None
+
+
+def sgd_init(params: Params) -> dict:
+    return {"vel": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(params: Params, grads: Params, state: dict, cfg: SGDConfig):
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    vel = jax.tree.map(lambda v, g: cfg.momentum * v + g.astype(jnp.float32),
+                       state["vel"], grads)
+    new_params = jax.tree.map(
+        lambda p, v: (p.astype(jnp.float32) - cfg.lr * v).astype(p.dtype),
+        params, vel)
+    return new_params, {"vel": vel, "step": state["step"] + 1}, \
+        {"grad_norm": gnorm}

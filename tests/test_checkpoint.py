@@ -1,0 +1,45 @@
+"""Checkpoint round-trips: nested dicts, lists, mixed dtypes, metadata."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import get_reduced
+from repro.models import transformer as tfm
+from repro.optim import adamw_init
+
+
+def test_roundtrip_nested(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.asarray([1, 2], jnp.int32),
+                   "c": [jnp.zeros((2,)), jnp.ones((3,), jnp.bfloat16)]},
+        "scalar": jnp.float32(3.5),
+    }
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, tree, {"step": 7})
+    restored, meta = checkpoint.restore(path)
+    assert meta["step"] == 7
+    flat_a, _ = jax.tree_util.tree_flatten(tree)
+    flat_b, _ = jax.tree_util.tree_flatten(restored)
+    assert len(flat_a) == len(flat_b)
+    for x, y in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+    assert isinstance(restored["nested"]["c"], list)
+
+
+def test_roundtrip_model_and_opt_state(tmp_path):
+    cfg = get_reduced("qwen2-moe-a2.7b")
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    path = str(tmp_path / "model")
+    checkpoint.save(path, {"params": params, "opt": opt}, {"arch": cfg.name})
+    restored, meta = checkpoint.restore(path)
+    assert meta["arch"] == cfg.name
+    want = jax.tree_util.tree_flatten(params)[0]
+    got = jax.tree_util.tree_flatten(restored["params"])[0]
+    assert len(want) == len(got)
+    for x, y in zip(want, got):
+        assert x.shape == y.shape and x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,47 @@
+"""Dry-run machinery smoke test on 8 host devices (subprocess isolation so
+the main test session keeps its single-device view)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def _run(arch, method="standard", kind="train"):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_dryrun_small.py"), arch,
+         method, kind],
+        capture_output=True, text=True, timeout=420, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+    return out.stdout
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "dbrx-132b", "mamba2-780m",
+                                  "jamba-1.5-large-398b"])
+def test_train_lowering(arch):
+    _run(arch, "standard", "train")
+
+
+def test_decode_lowering():
+    _run("qwen3-4b", "standard", "decode")
+
+
+def test_prefill_lowering():
+    _run("mamba2-780m", "standard", "prefill")
+
+
+def test_dml_lowering():
+    out = _run("qwen3-4b", "dml", "train")
+    assert "pod_axis" in out
+
+
+def test_fedavg_sync_lowering():
+    out = _run("qwen3-4b", "fedavg_sync", "train")
+    # the weight sync must put traffic on the pod (client) axis
+    val = float(out.split("pod_axis=")[1].split()[0])
+    assert val > 0

@@ -1,0 +1,85 @@
+"""Flash-attention Pallas kernel vs the pure-jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+
+def _run(B, S, T, Hq, Hkv, hd, dtype, window=None, bq=32, bk=32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, hd), dtype)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    qt, kt, vt = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    got = flash_attention(qt, kt, vt, causal=True, window=window,
+                          block_q=bq, block_k=bk,
+                          interpret=True).transpose(0, 2, 1, 3)
+    return np.asarray(want, np.float32), np.asarray(got, np.float32)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (1, 64, 2, 2, 16),     # MHA
+    (2, 96, 4, 2, 32),     # GQA 2:1
+    (1, 128, 8, 1, 8),     # MQA
+    (2, 50, 4, 4, 64),     # ragged S (padding path)
+])
+def test_causal_matches_oracle(B, S, Hq, Hkv, hd):
+    want, got = _run(B, S, S, Hq, Hkv, hd, jnp.float32)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 8, 33, 64, 1000])
+def test_sliding_window(window):
+    want, got = _run(1, 64, 64, 4, 2, 16, jnp.float32, window=window)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 3e-2)])
+def test_dtypes(dtype, atol):
+    want, got = _run(1, 64, 64, 2, 2, 32, dtype)
+    np.testing.assert_allclose(got, want, atol=atol, rtol=atol)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32), (128, 128)])
+def test_block_shapes(bq, bk):
+    want, got = _run(1, 96, 96, 2, 2, 16, jnp.float32, bq=bq, bk=bk)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_first_row_attends_self_only():
+    """Causal row 0 must equal v[0] exactly (softmax over one entry)."""
+    _, got = _run(1, 32, 32, 2, 2, 8, jnp.float32, seed=3)
+    k = jax.random.split(jax.random.PRNGKey(3), 3)
+    v = jax.random.normal(k[2], (1, 32, 2, 8), jnp.float32)
+    np.testing.assert_allclose(got[0, 0], np.asarray(v[0, 0]), atol=1e-6)
+
+
+def test_oracle_cache_positions_ring_buffer():
+    """Oracle handles out-of-order cache positions (ring-buffer decode)."""
+    key = jax.random.PRNGKey(0)
+    B, T, H, hd = 1, 8, 2, 16
+    k = jax.random.normal(key, (B, T, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hd))
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, 1, H, hd))
+    pos_q = jnp.array([[9]])
+    # ring layout: slots hold positions 8,9(self),2..7 with slot1 = current
+    pos_k = jnp.array([[8, 9, 2, 3, 4, 5, 6, 7]])
+    out = ref.attention(q, k, v, causal=True, positions_q=pos_q,
+                        positions_k=pos_k)
+    # equivalent ordered layout
+    order = jnp.argsort(pos_k[0])
+    out2 = ref.attention(q, k[:, order], v[:, order], causal=True,
+                         positions_q=pos_q, positions_k=pos_k[:, order])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)
+    # window=4 must drop positions < 6
+    outw = ref.attention(q, k, v, causal=True, window=4,
+                         positions_q=pos_q, positions_k=pos_k)
+    mask = pos_k[0] >= 6
+    outm = ref.attention(q, k[:, mask], v[:, mask], causal=True,
+                         positions_q=pos_q, positions_k=pos_k[:, mask])
+    np.testing.assert_allclose(np.asarray(outw), np.asarray(outm), atol=1e-6)

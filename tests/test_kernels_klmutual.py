@@ -1,0 +1,73 @@
+"""Fused mutual-KL kernel vs oracle + Eq.-2 mathematical properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.kl_mutual import kl_mutual
+
+
+def _logits(K, B, V, seed=0, scale=3.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (K, B, V)) * scale
+
+
+@pytest.mark.parametrize("K,B,V,bb,bv", [
+    (2, 8, 64, 8, 32),
+    (3, 16, 100, 8, 32),       # padded V (100 % 32 != 0)
+    (5, 7, 257, 4, 64),        # padded B and V
+    (8, 4, 512, 4, 512),       # single V block
+])
+def test_matches_oracle(K, B, V, bb, bv):
+    logits = _logits(K, B, V)
+    want = np.asarray(ref.mutual_kl(logits))
+    got = np.asarray(kl_mutual(logits, block_b=bb, block_v=bv,
+                               interpret=True))
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("temp", [0.5, 1.0, 2.0, 4.0])
+def test_temperature(temp):
+    logits = _logits(3, 8, 128, seed=1)
+    want = np.asarray(ref.mutual_kl(logits, temperature=temp))
+    got = np.asarray(kl_mutual(logits, temperature=temp, block_v=32,
+                               interpret=True))
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5),
+                                        (jnp.bfloat16, 5e-2)])
+def test_dtypes(dtype, atol):
+    logits = _logits(2, 8, 96).astype(dtype)
+    want = np.asarray(ref.mutual_kl(logits))
+    got = np.asarray(kl_mutual(logits, block_v=32, interpret=True))
+    np.testing.assert_allclose(got, want, atol=atol, rtol=atol)
+
+
+def test_identical_clients_zero():
+    one = _logits(1, 6, 80)[0]
+    logits = jnp.broadcast_to(one, (4,) + one.shape)
+    got = np.asarray(kl_mutual(logits, block_v=32, interpret=True))
+    np.testing.assert_allclose(got, 0.0, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(K=st.integers(2, 5), B=st.integers(1, 6), V=st.integers(2, 90),
+       seed=st.integers(0, 1000))
+def test_property_nonneg_and_oracle(K, B, V, seed):
+    """KL >= 0 for every client/example; kernel == oracle (hypothesis)."""
+    logits = _logits(K, B, V, seed=seed, scale=5.0)
+    want = np.asarray(ref.mutual_kl(logits))
+    got = np.asarray(kl_mutual(logits, block_b=4, block_v=32, interpret=True))
+    assert (want >= -1e-5).all()
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=5e-5)
+
+
+def test_permutation_equivariance():
+    """Permuting clients permutes the outputs identically (Eq. 2 symmetry)."""
+    logits = _logits(4, 5, 64, seed=2)
+    perm = jnp.array([2, 0, 3, 1])
+    a = np.asarray(kl_mutual(logits, block_v=32, interpret=True))[perm]
+    b = np.asarray(kl_mutual(logits[perm], block_v=32, interpret=True))
+    np.testing.assert_allclose(a, b, atol=1e-5)

@@ -1,0 +1,97 @@
+"""SSD Pallas kernel vs chunked oracle vs exact sequential recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _inputs(B, S, H, P, G, N, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    return x, dt, A, Bm, Cm
+
+
+def _sequential(x, dt, A, Bm, Cm):
+    """Token-by-token h_t = exp(dt A) h_{t-1} + dt B x; y = C h."""
+    B, S, H, P = x.shape
+    G = Bm.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    state = jnp.zeros((B, H, P, Bm.shape[3]))
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(dt[:, t] * A)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", Bh[:, t], x[:, t], dt[:, t])
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Ch[:, t], state))
+    return jnp.stack(ys, 1), state
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (1, 32, 2, 8, 1, 8, 8),
+    (2, 48, 4, 16, 2, 8, 16),
+    (1, 50, 4, 16, 2, 8, 16),   # ragged (padding path)
+    (1, 16, 2, 8, 2, 4, 16),    # single chunk
+])
+def test_kernel_vs_oracle_vs_sequential(B, S, H, P, G, N, chunk):
+    x, dt, A, Bm, Cm = _inputs(B, S, H, P, G, N)
+    y_ref, s_ref = ref.ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    y_seq, s_seq = _sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_seq),
+                               atol=1e-4, rtol=1e-4)
+    y_k, s_k = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 1e-4),
+                                        (jnp.bfloat16, 1e-1)])
+def test_dtypes(dtype, atol):
+    x, dt, A, Bm, Cm = _inputs(1, 32, 2, 8, 1, 8)
+    x = x.astype(dtype)
+    y_ref, _ = ref.ssd(x, dt, A, Bm, Cm, chunk=16)
+    y_k, _ = ssd_scan(x, dt, A, Bm, Cm, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_initial_state_continuation():
+    """ssd(x) over [0:S] == ssd over [0:k] then [k:S] with carried state."""
+    x, dt, A, Bm, Cm = _inputs(1, 40, 2, 8, 1, 8, seed=7)
+    y_full, s_full = ref.ssd(x, dt, A, Bm, Cm, chunk=8)
+    k = 24
+    y1, s1 = ref.ssd(x[:, :k], dt[:, :k], A, Bm[:, :k], Cm[:, :k], chunk=8)
+    y2, s2 = ref.ssd(x[:, k:], dt[:, k:], A, Bm[:, k:], Cm[:, k:], chunk=8,
+                     initial_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(4, 40), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 100))
+def test_property_chunk_invariance(S, chunk, seed):
+    """The chunked algorithm must be exactly chunk-size invariant."""
+    x, dt, A, Bm, Cm = _inputs(1, S, 2, 8, 1, 4, seed=seed)
+    y1, s1 = ref.ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    y2, s2 = ref.ssd(x, dt, A, Bm, Cm, chunk=S)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: reduced variant of each assigned family,
+one forward + one train step on CPU; output shapes + no NaNs (deliverable f).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tfm
+from repro.optim import AdamWConfig, adamw_init
+
+B, S = 2, 64
+
+
+def _batch(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (B, S - cfg.prefix_tokens), 0,
+                              cfg.vocab_size)
+    prefix = None
+    if cfg.prefix_tokens:
+        prefix = jax.random.normal(key, (B, cfg.prefix_tokens,
+                                         cfg.prefix_dim))
+    return toks, prefix
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_shapes_and_no_nans(arch):
+    cfg = get_reduced(arch)
+    assert cfg.n_layers <= 8 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    toks, prefix = _batch(cfg)
+    logits, aux = tfm.forward(params, cfg, toks, prefix)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    for v in aux.values():
+        assert not bool(jnp.isnan(v))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_reduced(arch)
+    params = tfm.init_model(jax.random.PRNGKey(1), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup=1,
+                                                    total_steps=10)))
+    toks, prefix = _batch(cfg, seed=1)
+    args = (params, opt, toks) if prefix is None else (params, opt, toks, prefix)
+    params2, opt2, metrics = step(*args)
+    assert float(metrics["ce"]) > 0 and np.isfinite(float(metrics["ce"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     params, params2)
+    assert max(jax.tree.leaves(d)) > 0
+    # loss finite on the updated params too (no blow-up)
+    loss2, _ = tfm.loss_fn(params2, cfg, toks, prefix)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "dbrx-132b": (40, 6144, 48, 8, 100352),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 32000),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 65536),
+        "qwen3-8b": (36, 4096, 32, 8, 151936),
+        "minitron-4b": (32, 3072, 24, 8, 256000),
+        "musicgen-medium": (48, 1536, 24, 24, 2048),
+        "mamba2-780m": (48, 1536, 0, 0, 50280),
+        "qwen3-4b": (36, 2560, 32, 8, 151936),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 151936),
+        "qwen1.5-110b": (80, 8192, 64, 8, 152064),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.vocab_size)
+    assert got == expected
+    # param formula is exact (verified against materialised params in reduced
+    # variants; here it guards config edits)
+    assert cfg.param_count() > 0
+
+
+def test_moe_configs():
+    dbrx = get_config("dbrx-132b")
+    assert dbrx.moe.n_experts == 16 and dbrx.moe.top_k == 4
+    qmoe = get_config("qwen2-moe-a2.7b")
+    assert (qmoe.moe.n_experts, qmoe.moe.top_k,
+            qmoe.moe.n_shared_experts) == (60, 4, 4)
+    jamba = get_config("jamba-1.5-large-398b")
+    assert jamba.moe.n_experts == 16 and jamba.moe.top_k == 2
+    # jamba interleave: 1 attention per 8 layers, MoE every 2nd
+    mixers = [s.mixer for s in jamba.period]
+    assert mixers.count("attn") == 1 and len(mixers) == 8
+    assert [s.ffn for s in jamba.period].count("moe") == 4
+
+
+def test_param_count_formula_matches_reduced():
+    for arch in ARCH_IDS:
+        cfg = get_reduced(arch)
+        params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+        actual = sum(p.size for p in jax.tree.leaves(params))
+        assert actual == cfg.param_count(), arch
+
+
+def test_nominal_param_counts():
+    """Full configs land on the published sizes (within 10%)."""
+    nominal = {"dbrx-132b": 132e9, "jamba-1.5-large-398b": 398e9,
+               "llava-next-mistral-7b": 7.2e9, "qwen3-8b": 8.2e9,
+               "mamba2-780m": 0.78e9, "qwen2-moe-a2.7b": 14.3e9,
+               "qwen1.5-110b": 111e9}
+    for arch, want in nominal.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.10, (arch, got, want)
+    # active counts for MoE
+    assert abs(get_config("dbrx-132b").active_param_count() - 36e9) < 4e9
+    assert abs(get_config("qwen2-moe-a2.7b").active_param_count() - 2.7e9) < 0.5e9

@@ -1,0 +1,68 @@
+"""Logical-axis sharding rules: mapping, divisibility, tuple rules."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 1, reason="needs a device")
+
+
+class FakeMesh:
+    def __init__(self, names, sizes):
+        self.axis_names = tuple(names)
+        self.axis_sizes = tuple(sizes)
+
+
+MESH = FakeMesh(("data", "model"), (16, 16))
+MESH3 = FakeMesh(("pod", "data", "model"), (2, 16, 16))
+
+
+def test_basic_mapping():
+    spec = shd.logical_to_spec(("batch", "seq", "heads"), MESH,
+                               shape=(256, 4096, 32))
+    assert spec == P("data", None, "model")
+
+
+def test_tuple_rule_multi_pod():
+    spec = shd.logical_to_spec(("batch", None), MESH3, shape=(256, 10))
+    assert spec == P(("pod", "data"))
+
+
+def test_tuple_rule_partial_divisibility():
+    # batch=2 divides pod(2) but not pod*data(32): keep the prefix only
+    spec = shd.logical_to_spec(("batch",), MESH3, shape=(2,))
+    assert spec == P("pod")
+
+
+def test_indivisible_dropped():
+    # 24 heads % 16 != 0 -> replicated
+    spec = shd.logical_to_spec(("batch", "heads"), MESH, shape=(32, 24))
+    assert spec == P("data")
+
+
+def test_duplicate_physical_axis_kept_once():
+    # kv_seq and kv_heads both map to model; first occurrence wins
+    spec = shd.logical_to_spec(("batch", "kv_seq", "kv_heads", None), MESH,
+                               shape=(128, 32768, 16, 128))
+    assert spec == P("data", "model")
+
+
+def test_rules_override():
+    with shd.axis_rules({"batch": ("data",), "client": "pod"}):
+        spec = shd.logical_to_spec(("client", "batch"), MESH3,
+                                   shape=(2, 128))
+        assert spec == P("pod", "data")
+
+
+def test_unknown_axis_replicated():
+    spec = shd.logical_to_spec(("nonsense", "batch"), MESH, shape=(4, 32))
+    assert spec == P(None, "data")
+
+
+def test_constrain_noop_outside_mesh():
+    x = jax.numpy.ones((8, 8))
+    y = shd.constrain(x, "batch", "ff")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
