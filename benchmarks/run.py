@@ -180,19 +180,31 @@ def bench_kernels() -> None:
     print(f"kernels,ssd_ref,{us:.0f},{chunk_flops}")
 
 
+BENCHES = {
+    "table2": bench_table2,
+    "history": bench_history,
+    "comm": bench_comm,
+    "hard_task": bench_hard_task,
+    "noniid": bench_noniid,
+    "kernels": bench_kernels,
+}
+
+
 def main() -> None:
     global FAST
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", choices=sorted(BENCHES), default=None,
+                    help="run a single bench section")
     args, _ = ap.parse_known_args()
     FAST = args.fast
     t0 = time.time()
-    bench_table2()
-    bench_history()
-    bench_comm()
-    bench_hard_task()
-    bench_noniid()
-    bench_kernels()
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t1 = time.time()
+        fn()
+        print(f"# section_seconds,{name},{time.time() - t1:.1f}")
     print(f"\n# total_bench_seconds,{time.time() - t0:.0f}")
 
 

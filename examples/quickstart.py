@@ -4,6 +4,10 @@ Three clients (reduced qwen3-4b geometry) each train on a private synthetic
 domain; every step they also descend Eq. 1 on a shared public batch —
 sharing only logits, never weights.
 
+Clients live on the leading K axis of every param/opt leaf (the
+``core.stacking`` layout shared by the VisionNet round engine and the
+mesh-scale path), so one fused, jitted step trains all of them at once.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import stacking
 from repro.core.async_fl import layer_schedule
 from repro.core.mutual import (mutual_kl_loss, sparse_mutual_kl_loss,
                                topk_predictions)
@@ -38,16 +39,14 @@ Params = Any
 # init
 
 def stacked_init(key, cfg: ModelConfig, n_clients: int) -> Params:
-    keys = jax.random.split(key, n_clients)
-    return jax.vmap(lambda k: tfm.init_model(k, cfg))(keys)
+    return stacking.stacked_init(key, lambda k: tfm.init_model(k, cfg),
+                                 n_clients)
 
 
 def stacked_adamw_init(stacked_params: Params) -> Dict:
-    state = adamw_init(stacked_params)
-    # per-client step counters
-    k = jax.tree.leaves(stacked_params)[0].shape[0]
-    state["step"] = jnp.zeros((), jnp.int32)
-    return state
+    """AdamW state over the stacked params; the scalar step is shared across
+    clients (one LR schedule for the whole fleet)."""
+    return adamw_init(stacked_params)
 
 
 def stacked_logical_axes(cfg: ModelConfig) -> Params:

@@ -6,10 +6,12 @@ mesh axis when the stack is sharded client-wise.
 """
 from __future__ import annotations
 
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
+
+from repro.core.stacking import stack_params, unstack_params  # noqa: F401
+# (re-exported: the stacked-layout helpers live in core.stacking, shared
+# with the mesh-scale engine)
 
 
 def average_weights(stacked_params):
@@ -35,15 +37,6 @@ def weighted_average_weights(stacked_params, scores):
         mean = jnp.sum(pf * wb, axis=0, keepdims=True)
         return jnp.broadcast_to(mean, p.shape).astype(p.dtype)
     return jax.tree.map(avg, stacked_params)
-
-
-def stack_params(params_list: Sequence):
-    """List of per-client pytrees -> stacked pytree (K on axis 0)."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *params_list)
-
-
-def unstack_params(stacked, k: int):
-    return [jax.tree.map(lambda p, i=i: p[i], stacked) for i in range(k)]
 
 
 def comm_bytes_per_round(n_params: int, n_clients: int,

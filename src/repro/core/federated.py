@@ -11,24 +11,34 @@ same architecture, same per-round data size, same epochs, IID folds):
               rotating public fold and descend Eq. 1
               (BCE + avg KL vs the received, fixed predictions)
 
-Clients are a *stacked* pytree (leading axis K) and local training is
-vmapped — the same client-axis layout the mesh-scale path shards over pods.
+Clients are a *stacked* pytree (leading axis K — ``core.stacking``, the
+same client-axis layout the mesh-scale path shards over pods) and a full
+round executes as a handful of jitted programs instead of O(K · batches)
+Python-dispatched calls:
+
+  _local_scan     vmap over clients of lax.scan over the fixed-shape
+                  (K, T, B) batch plan from ``data.federated``
+  _mutual_scan    all mutual epochs fused: dropout-free share + Eq.-1
+                  descent for all K clients (``mutual.bernoulli_mutual_loss``)
+  _predict_stacked  vmapped inference — sharing, scores, and eval
+
 Communication bytes are accounted per round for the bandwidth claim.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.visionnet import VisionNetConfig
-from repro.core import async_fl, fedavg
-from repro.core.mutual import bernoulli_mutual_eval
-from repro.data.federated import FoldScheduler, NonIIDScheduler
+from repro.core import async_fl, fedavg, stacking
+from repro.core.mutual import bernoulli_mutual_loss
+from repro.data.federated import (FoldScheduler, NonIIDScheduler,
+                                  round_batch_indices)
 from repro.models.visionnet import (bce_loss, init_visionnet,
                                     shallow_deep_split, visionnet_forward)
 from repro.optim import SGDConfig, sgd_init, sgd_update
@@ -76,45 +86,113 @@ class History:
 
 
 # ---------------------------------------------------------------------------
-# jitted steps
-
-@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg"))
-def _local_step(params, opt, images, labels, key, vn_cfg: VisionNetConfig,
-                sgd_cfg: SGDConfig):
-    def loss_fn(p):
-        probs = visionnet_forward(p, vn_cfg, images, train=True,
-                                  dropout_key=key)
-        return bce_loss(probs, labels)
-    loss, grads = jax.value_and_grad(loss_fn)(params)
-    params, opt, _ = sgd_update(params, grads, opt, sgd_cfg)
-    return params, opt, loss
+# jitted programs — each one covers ALL K clients in a single dispatch
 
 
-@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg", "kl_weight"))
-def _mutual_step(params, opt, images, labels, fixed_probs, my_idx, key,
+def _masked_lerp(old, new, w):
+    """Apply ``new`` only where the step is real (w=1); padding keeps old."""
+    return jax.tree.map(lambda a, b: w * b + (1 - w) * a, old, new)
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
+                                             "conv_impl"))
+def _local_scan(stacked_params, stacked_opt, images, labels, masks, keys,
+                vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                conv_impl: str = "fused"):
+    """Local epochs for all clients: vmap(client) of scan(batch plan).
+
+    images (K,T,B,H,W,C) · labels (K,T,B) · masks (K,T) · keys (K,T,2).
+    Returns (stacked_params, stacked_opt, mean BCE per client (K,)).
+    """
+
+    def one_client(params, opt, imgs, labs, w, ks):
+        def body(carry, xs):
+            p, o = carry
+            im, la, wi, k = xs
+
+            def loss_fn(q):
+                probs = visionnet_forward(q, vn_cfg, im, train=True,
+                                          dropout_key=k,
+                                          conv_impl=conv_impl)
+                return bce_loss(probs, la)
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p2, o2, _ = sgd_update(p, grads, o, sgd_cfg)
+            p2 = _masked_lerp(p, p2, wi)
+            o2 = {"vel": _masked_lerp(o["vel"], o2["vel"], wi),
+                  "step": o["step"] + wi.astype(jnp.int32)}
+            return (p2, o2), loss * wi
+
+        (params, opt), losses = jax.lax.scan(body, (params, opt),
+                                             (imgs, labs, w, ks))
+        return params, opt, jnp.sum(losses) / jnp.maximum(jnp.sum(w), 1.0)
+
+    return jax.vmap(one_client)(stacked_params, stacked_opt, images, labels,
+                                masks, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
+                                             "kl_weight", "conv_impl"))
+def _mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels, keys,
                  vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
-                 kl_weight: float):
-    """Eq. 1 step for ONE client: BCE + avg KL(live || fixed others)."""
-    K = fixed_probs.shape[0]
+                 kl_weight: float, conv_impl: str = "fused"):
+    """All mutual epochs for all K clients, fused into one program.
 
-    def loss_fn(p):
-        probs = visionnet_forward(p, vn_cfg, images, train=True,
-                                  dropout_key=key)
-        bce = bce_loss(probs, labels)
-        pl_ = jnp.clip(probs, 1e-6, 1 - 1e-6)[None, :]          # (1,B)
-        pf = jnp.clip(fixed_probs, 1e-6, 1 - 1e-6)              # (K,B)
-        kl = pl_ * jnp.log(pl_ / pf) + (1 - pl_) * jnp.log((1 - pl_) / (1 - pf))
-        mask = (jnp.arange(K) != my_idx).astype(jnp.float32)[:, None]
-        kld_avg = jnp.sum(kl * mask, axis=0) / max(K - 1, 1)    # (B,)
-        return bce + kl_weight * jnp.mean(kld_avg), (bce, jnp.mean(kld_avg))
-    (loss, (bce, kld)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-    params, opt, _ = sgd_update(params, grads, opt, sgd_cfg)
-    return params, opt, loss, bce, kld
+    keys (E, K, 2).  Per epoch: every client shares its dropout-free
+    predictions on the public fold (what actually goes over the wire),
+    then descends Eq. 1 — BCE + kl_weight · KLD vs the received tensor
+    held fixed (``bernoulli_mutual_loss``).  Returns the final epoch's
+    per-client (total loss, bce, kld), each (K,).
+    """
+
+    def epoch(carry, ks):
+        params, opt = carry
+        shared = jax.vmap(
+            lambda q: visionnet_forward(q, vn_cfg, pub_images,
+                                        train=False))(params)       # (K,B)
+
+        def total_loss(sp):
+            live = jax.vmap(
+                lambda q, k: visionnet_forward(q, vn_cfg, pub_images,
+                                               train=True, dropout_key=k,
+                                               conv_impl=conv_impl)
+            )(sp, ks)                                               # (K,B)
+            bce = jax.vmap(lambda pr: bce_loss(pr, pub_labels))(live)
+            kld = bernoulli_mutual_loss(live, fixed_probs=shared)   # (K,)
+            return jnp.sum(bce) + kl_weight * jnp.sum(kld), (bce, kld)
+
+        (_, (bce, kld)), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(params)
+        # per-client update so grad clipping stays per client, exactly as
+        # in the per-client loop this replaces
+        params, opt, _ = jax.vmap(
+            lambda q, g, o: sgd_update(q, g, o, sgd_cfg))(params, grads, opt)
+        return (params, opt), (bce + kl_weight * kld, bce, kld)
+
+    (stacked_params, stacked_opt), (loss, bce, kld) = jax.lax.scan(
+        epoch, (stacked_params, stacked_opt), keys)
+    return stacked_params, stacked_opt, (loss[-1], bce[-1], kld[-1])
 
 
 @functools.partial(jax.jit, static_argnames=("vn_cfg",))
-def _predict(params, images, vn_cfg: VisionNetConfig):
-    return visionnet_forward(params, vn_cfg, images, train=False)
+def _predict_stacked(stacked_params, images, vn_cfg: VisionNetConfig):
+    """Vmapped inference on a SHARED batch: (K-stacked params, (B,...)) ->
+    (K, B) probabilities.  The sharing / eval / accuracy path."""
+    return jax.vmap(lambda p: visionnet_forward(p, vn_cfg, images,
+                                                train=False))(stacked_params)
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg",))
+def _accuracy_scan(stacked_params, images, labels, masks,
+                   vn_cfg: VisionNetConfig):
+    """Per-client accuracy on per-client (padded) data:
+    images (K,N,H,W,C) · labels (K,N) · masks (K,N) -> (K,)."""
+    probs = jax.vmap(
+        lambda p, im: visionnet_forward(p, vn_cfg, im, train=False)
+    )(stacked_params, images)
+    hit = ((probs > 0.5) == (labels > 0.5)).astype(jnp.float32)
+    return jnp.sum(hit * masks, axis=1) / jnp.maximum(
+        jnp.sum(masks, axis=1), 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +210,11 @@ class FederatedTrainer:
         self.sgd_cfg = SGDConfig(lr=fed_cfg.lr, momentum=fed_cfg.momentum,
                                  clip_norm=fed_cfg.clip_norm)
         self.key = jax.random.PRNGKey(fed_cfg.seed)
+        self._plan_seed = fed_cfg.seed * 100_003 + 17
+        # (round, program) pairs — one entry per jitted dispatch, so tests
+        # can assert the engine really is a handful of programs per round
+        self.dispatch_log: List[Tuple[int, str]] = []
+        self._round_idx = -1                      # -1 = init phase
         # Algorithm 1 line 1: Fold <- (1+Clients) x Rounds + 1
         if fed_cfg.non_iid_alpha > 0:
             self.folds = NonIIDScheduler(train_labels, fed_cfg.n_clients,
@@ -145,81 +228,100 @@ class FederatedTrainer:
         self.key, kg = jax.random.split(self.key)
         self.global_params = init_visionnet(kg, vn_cfg)
         self.global_opt = sgd_init(self.global_params)
-        self._train_single("global", self.folds.pop())
+        self._train_single(self.folds.pop())
         # lines 7-8: clients start from G
         K = fed_cfg.n_clients
-        self.client_params = jax.tree.map(
-            lambda p: jnp.broadcast_to(p[None], (K,) + p.shape).copy(),
-            self.global_params)
-        self.client_opts = {
-            "vel": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                self.client_params),
-            "step": jnp.zeros((K,), jnp.int32)}
+        self.client_params = stacking.broadcast_stack(self.global_params, K)
+        self.client_opts = stacking.stacked_sgd_init(self.client_params)
         self.n_params = sum(p.size for p in jax.tree.leaves(self.global_params))
         self.shallow_mask = shallow_deep_split(self.global_params)
         self.history = History()
 
     # -- helpers ----------------------------------------------------------
-    def _batches(self, fold: np.ndarray, epochs: int):
-        bs = self.fed.batch_size
-        rng = np.random.default_rng(int(fold[0]) + 17)
-        for _ in range(epochs):
-            order = rng.permutation(len(fold))
-            for i in range(0, len(order) - bs + 1, bs):
-                idx = fold[order[i: i + bs]]
-                yield self.images[idx], self.labels[idx]
+    def _next_plan_seed(self) -> int:
+        self._plan_seed += 1
+        return self._plan_seed
 
-    def _train_single(self, which: str, fold: np.ndarray):
-        losses = []
-        for imgs, labs in self._batches(fold, self.fed.local_epochs):
-            self.key, k = jax.random.split(self.key)
-            self.global_params, self.global_opt, loss = _local_step(
-                self.global_params, self.global_opt, jnp.asarray(imgs),
-                jnp.asarray(labs), k, self.vn_cfg, self.sgd_cfg)
-            losses.append(float(loss))
-        return float(np.mean(losses)) if losses else 0.0
+    def _split_keys(self, *shape) -> jax.Array:
+        """Dropout keys for a whole program at once: (*shape, 2) uint32."""
+        self.key, sub = jax.random.split(self.key)
+        n = int(np.prod(shape))
+        return jax.random.split(sub, n).reshape(*shape, 2)
 
-    def _train_client(self, c: int, fold: np.ndarray) -> float:
-        """Local training of client c (stacked storage, per-client slices)."""
-        params = jax.tree.map(lambda p: p[c], self.client_params)
-        opt = {"vel": jax.tree.map(lambda p: p[c], self.client_opts["vel"]),
-               "step": self.client_opts["step"][c]}
-        losses = []
-        for imgs, labs in self._batches(fold, self.fed.local_epochs):
-            self.key, k = jax.random.split(self.key)
-            params, opt, loss = _local_step(params, opt, jnp.asarray(imgs),
-                                            jnp.asarray(labs), k,
-                                            self.vn_cfg, self.sgd_cfg)
-            losses.append(float(loss))
-        self.client_params = jax.tree.map(
-            lambda s, p: s.at[c].set(p), self.client_params, params)
-        self.client_opts["vel"] = jax.tree.map(
-            lambda s, p: s.at[c].set(p), self.client_opts["vel"], opt["vel"])
-        self.client_opts["step"] = self.client_opts["step"].at[c].set(opt["step"])
-        return float(np.mean(losses)) if losses else 0.0
+    def _gather(self, idx: np.ndarray):
+        return jnp.asarray(self.images[idx]), jnp.asarray(self.labels[idx])
 
-    def _client_accuracy(self, c: int, images, labels) -> float:
-        params = jax.tree.map(lambda p: p[c], self.client_params)
-        correct = 0
+    def _train_single(self, fold: np.ndarray) -> float:
+        """Global-model training = the SAME scan program with K=1."""
+        idx, mask = round_batch_indices([fold], self.fed.local_epochs,
+                                        self.fed.batch_size,
+                                        seed=self._next_plan_seed())
+        if idx.shape[1] == 0:
+            return 0.0
+        imgs, labs = self._gather(idx)
+        keys = self._split_keys(1, idx.shape[1])
+        gp = stacking.expand_stack(self.global_params)
+        go = stacking.expand_stack(self.global_opt)
+        gp, go, losses = _local_scan(gp, go, imgs, labs, jnp.asarray(mask),
+                                     keys, self.vn_cfg, self.sgd_cfg,
+                                     conv_impl="native")
+        self.dispatch_log.append((self._round_idx, "local_scan"))
+        self.global_params = stacking.client_slice(gp, 0)
+        self.global_opt = stacking.client_slice(go, 0)
+        return float(losses[0])
+
+    def _local_round(self):
+        """Pop K client folds and run every client's local epochs in ONE
+        vmapped scan dispatch.  Returns (folds, per-client mean loss)."""
+        K = self.fed.n_clients
+        folds, idx, mask = self.folds.pop_round(
+            K, self.fed.local_epochs, self.fed.batch_size,
+            seed=self._next_plan_seed())
+        if idx.shape[1] == 0:
+            return folds, [0.0] * K
+        imgs, labs = self._gather(idx)
+        keys = self._split_keys(K, idx.shape[1])
+        self.client_params, self.client_opts, losses = _local_scan(
+            self.client_params, self.client_opts, imgs, labs,
+            jnp.asarray(mask), keys, self.vn_cfg, self.sgd_cfg,
+            conv_impl="fused" if K > 1 else "native")
+        self.dispatch_log.append((self._round_idx, "local_scan"))
+        return folds, [float(x) for x in np.asarray(losses)]
+
+    def _fold_accuracies(self, folds) -> List[float]:
+        """Each client scored on its OWN fold — one vmapped dispatch over a
+        padded (K, N) stack (the async baseline's weighting metric)."""
+        n = max(max((len(f) for f in folds), default=0), 1)
+        K = len(folds)
+        idx = np.zeros((K, n), np.int64)
+        mask = np.zeros((K, n), np.float32)
+        for c, f in enumerate(folds):
+            idx[c, :len(f)] = f
+            mask[c, :len(f)] = 1.0
+        imgs, labs = self._gather(idx)
+        acc = _accuracy_scan(self.client_params, imgs, labs,
+                             jnp.asarray(mask), self.vn_cfg)
+        self.dispatch_log.append((self._round_idx, "accuracy_scan"))
+        return [float(a) for a in np.asarray(acc)]
+
+    def _accuracy_chunked(self, stacked_params, images, labels) -> np.ndarray:
+        """All clients' accuracy on a SHARED dataset via the vmapped
+        predict, eval_batch examples at a time.  Returns (K,)."""
+        K = jax.tree.leaves(stacked_params)[0].shape[0]
+        correct = np.zeros((K,), np.int64)
         for i in range(0, len(images), self.fed.eval_batch):
-            probs = _predict(params, jnp.asarray(images[i:i + self.fed.eval_batch]),
-                             self.vn_cfg)
-            correct += int(np.sum((np.asarray(probs) > 0.5) ==
-                                  labels[i:i + self.fed.eval_batch]))
-        return correct / len(images)
-
-    def _accuracy_on(self, params, images, labels) -> float:
-        correct = 0
-        for i in range(0, len(images), self.fed.eval_batch):
-            probs = _predict(params, jnp.asarray(images[i:i + self.fed.eval_batch]),
-                             self.vn_cfg)
-            correct += int(np.sum((np.asarray(probs) > 0.5) ==
-                                  labels[i:i + self.fed.eval_batch]))
+            probs = _predict_stacked(stacked_params,
+                                     jnp.asarray(images[i:i + self.fed.eval_batch]),
+                                     self.vn_cfg)
+            self.dispatch_log.append((self._round_idx, "predict"))
+            correct += np.sum((np.asarray(probs) > 0.5) ==
+                              labels[None, i:i + self.fed.eval_batch], axis=1)
         return correct / len(images)
 
     # -- rounds -----------------------------------------------------------
     def run(self) -> History:
         for r in range(self.fed.rounds):
+            self._round_idx = r
             if self.fed.method == "dml":
                 self._round_dml(r)
             elif self.fed.method == "fedavg":
@@ -232,66 +334,49 @@ class FederatedTrainer:
 
     def _round_dml(self, r: int):
         K = self.fed.n_clients
-        local_losses = [self._train_client(c, self.folds.pop())
-                        for c in range(K)]
+        _, local_losses = self._local_round()
         # public fold: rotating common test set from the server
         pub = self.folds.pop()
-        pub_imgs = jnp.asarray(self.images[pub])
-        pub_labs = jnp.asarray(self.labels[pub])
         kl_losses = [0.0] * K
-        for _ in range(self.fed.mutual_epochs):
+        comm = 0
+        if self.fed.mutual_epochs > 0:
+            pub_imgs = jnp.asarray(self.images[pub])
+            pub_labs = jnp.asarray(self.labels[pub])
+            keys = self._split_keys(self.fed.mutual_epochs, K)
+            self.client_params, self.client_opts, (loss, _, kld) = \
+                _mutual_scan(self.client_params, self.client_opts, pub_imgs,
+                             pub_labs, keys, self.vn_cfg, self.sgd_cfg,
+                             self.fed.kl_weight,
+                             conv_impl="fused" if K > 1 else "native")
+            self.dispatch_log.append((r, "mutual_scan"))
+            local_losses = [float(x) for x in np.asarray(loss)]
+            kl_losses = [float(x) for x in np.asarray(kld)]
             # inference + sharing: each client ships (B_pub,) probabilities
-            all_probs = jnp.stack([
-                _predict(jax.tree.map(lambda p: p[c], self.client_params),
-                         pub_imgs, self.vn_cfg) for c in range(K)])
-            comm = 2 * K * all_probs.shape[1] * 4        # up + broadcast down
-            for c in range(K):
-                params = jax.tree.map(lambda p: p[c], self.client_params)
-                opt = {"vel": jax.tree.map(lambda p: p[c], self.client_opts["vel"]),
-                       "step": self.client_opts["step"][c]}
-                self.key, k = jax.random.split(self.key)
-                params, opt, loss, bce, kld = _mutual_step(
-                    params, opt, pub_imgs, pub_labs, all_probs,
-                    jnp.int32(c), k, self.vn_cfg, self.sgd_cfg,
-                    self.fed.kl_weight)
-                kl_losses[c] = float(kld)
-                local_losses[c] = float(loss)
-                self.client_params = jax.tree.map(
-                    lambda s, p: s.at[c].set(p), self.client_params, params)
-                self.client_opts["vel"] = jax.tree.map(
-                    lambda s, p: s.at[c].set(p), self.client_opts["vel"],
-                    opt["vel"])
-                self.client_opts["step"] = \
-                    self.client_opts["step"].at[c].set(opt["step"])
+            # up and receives the (K, B_pub) broadcast down, EVERY epoch
+            comm = self.fed.mutual_epochs * 2 * K * len(pub) * 4
         self.history.total_comm_bytes += comm
         self.history.rounds.append(RoundLog(r, local_losses, kl_losses, comm))
 
     def _round_fedavg(self, r: int):
         K = self.fed.n_clients
-        losses = [self._train_client(c, self.folds.pop()) for c in range(K)]
+        _, losses = self._local_round()
         self.folds.pop()                                  # global fold unused
         self.client_params = fedavg.average_weights(self.client_params)
-        self.global_params = jax.tree.map(lambda p: p[0], self.client_params)
+        self.global_params = stacking.client_slice(self.client_params, 0)
         comm = fedavg.comm_bytes_per_round(self.n_params, K)
         self.history.total_comm_bytes += comm
         self.history.rounds.append(RoundLog(r, losses, [0.0] * K, comm))
 
     def _round_async(self, r: int):
         K = self.fed.n_clients
-        losses, scores = [], []
-        for c in range(K):
-            fold = self.folds.pop()
-            losses.append(self._train_client(c, fold))
-            scores.append(self._client_accuracy(c, self.images[fold],
-                                                self.labels[fold]))
-        stacked_mask = jax.tree.map(
-            lambda m: m, self.shallow_mask)               # same mask all clients
+        folds, losses = self._local_round()
+        scores = self._fold_accuracies(folds)
         self.client_params, layer = async_fl.async_round_update(
-            self.client_params, jnp.asarray(scores), stacked_mask, r,
+            self.client_params, jnp.asarray(scores), self.shallow_mask, r,
             self.fed.delta, self.fed.min_round)
         # Algorithm 1 lines 17-18: G takes the average then trains on a fold
-        self.global_params = jax.tree.map(lambda p: p[0], self.client_params)
-        gl = self._train_single("global", self.folds.pop())
+        self.global_params = stacking.client_slice(self.client_params, 0)
+        self._train_single(self.folds.pop())
         n_sh, n_dp = async_fl.count_params_by_mask(self.global_params,
                                                    self.shallow_mask)
         comm = async_fl.comm_bytes_per_round(n_sh, n_dp, K, layer)
@@ -301,10 +386,11 @@ class FederatedTrainer:
 
     # -- final eval (paper Table II / Fig. 3) ------------------------------
     def evaluate(self, test_images: np.ndarray, test_labels: np.ndarray):
-        K = self.fed.n_clients
+        self._round_idx = self.fed.rounds                  # eval phase
         self.history.client_test_acc = [
-            self._client_accuracy(c, test_images, test_labels)
-            for c in range(K)]
-        self.history.global_test_acc = self._accuracy_on(
-            self.global_params, test_images, test_labels)
+            float(a) for a in self._accuracy_chunked(
+                self.client_params, test_images, test_labels)]
+        gp = stacking.expand_stack(self.global_params)
+        self.history.global_test_acc = float(self._accuracy_chunked(
+            gp, test_images, test_labels)[0])
         return self.history

@@ -74,9 +74,9 @@ def _distributed_topk(logp, k: int):
     plain top_k when there is no mesh / no sharded vocab axis.
     """
     from jax.sharding import PartitionSpec as P
-    from repro.sharding import get_rules
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or not mesh.axis_names:
+    from repro.sharding import current_mesh, get_rules, shard_map
+    mesh = current_mesh()
+    if mesh is None:
         return jax.lax.top_k(logp, k)
     rules = get_rules()
     vocab_ax = rules.get("vocab")
@@ -99,9 +99,8 @@ def _distributed_topk(logp, k: int):
 
     spec_in = P(client_ax, *([None] * (logp.ndim - 2)), vocab_ax)
     spec_out = P(client_ax, *([None] * (logp.ndim - 1)))
-    idx, vals = jax.shard_map(local, mesh=mesh, in_specs=(spec_in,),
-                              out_specs=(spec_out, spec_out),
-                              check_vma=False)(logp)
+    idx, vals = shard_map(local, mesh=mesh, in_specs=(spec_in,),
+                          out_specs=(spec_out, spec_out))(logp)
     return vals, idx
 
 
@@ -171,17 +170,33 @@ def sparse_share_bytes(n_clients: int, n_examples: int, k: int) -> int:
 # ---------------------------------------------------------------------------
 # Bernoulli case (VisionNet sigmoid head — the paper's actual case study)
 
-def bernoulli_mutual_loss(all_probs, stop_grad_others: bool = True):
-    """all_probs: (K, B) sigmoid outputs -> (K,) per-client Eq.-2 means."""
-    K = all_probs.shape[0]
-    p = jnp.clip(all_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)
-    q = jax.lax.stop_gradient(p) if stop_grad_others else p
-    pi = p[:, None, :]
-    pj = q[None, :, :]
+def bernoulli_mutual_terms(live_probs, fixed_probs):
+    """Eq. 2 with the j-side fixed, Bernoulli case: (K,B) x (K,B) -> (K,B).
+
+    out[i, b] = 1/(K-1) sum_{j != i} KL(Bern(live_i) || Bern(fixed_j)).
+    Callers wanting the federated gradient semantics stop_gradient the
+    fixed side (received predictions are data, not parameters).
+    """
+    K = live_probs.shape[0]
+    pi = jnp.clip(live_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)[:, None, :]
+    pj = jnp.clip(fixed_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)[None, :, :]
     kl = pi * jnp.log(pi / pj) + (1 - pi) * jnp.log((1 - pi) / (1 - pj))
     mask = (1.0 - jnp.eye(K))[:, :, None]
-    terms = jnp.sum(kl * mask, axis=1) / max(K - 1, 1)       # (K,B)
-    return jnp.mean(terms, axis=-1)
+    return jnp.sum(kl * mask, axis=1) / max(K - 1, 1)        # (K,B)
+
+
+def bernoulli_mutual_loss(all_probs, stop_grad_others: bool = True,
+                          fixed_probs=None):
+    """all_probs: (K, B) sigmoid outputs -> (K,) per-client Eq.-2 means.
+
+    ``fixed_probs`` optionally supplies the received (j-side) predictions —
+    e.g. dropout-free shared probabilities while ``all_probs`` is the live
+    training-mode forward.  Defaults to ``all_probs`` itself.
+    """
+    fixed = all_probs if fixed_probs is None else fixed_probs
+    if stop_grad_others:
+        fixed = jax.lax.stop_gradient(fixed)
+    return jnp.mean(bernoulli_mutual_terms(all_probs, fixed), axis=-1)
 
 
 def bernoulli_mutual_eval(all_probs):

@@ -1,0 +1,62 @@
+"""Client-stacked pytree helpers shared by the two federated engines.
+
+Both the VisionNet Algorithm-1 engine (``core.federated``) and the
+mesh-scale LLM path (``core.distributed``) keep clients as a leading K
+axis on every param/opt leaf — the layout the mesh shards over pods and
+the round engine vmaps over.  The construction/slicing helpers live here
+so the engines cannot drift apart.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def stacked_init(key, init_fn: Callable[[jax.Array], Params],
+                 n_clients: int) -> Params:
+    """K independent initialisations, stacked on a leading client axis."""
+    keys = jax.random.split(key, n_clients)
+    return jax.vmap(init_fn)(keys)
+
+
+def broadcast_stack(params: Params, n_clients: int) -> Params:
+    """One pytree replicated to a K-stacked pytree (clients start from G)."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_clients,) + p.shape).copy(),
+        params)
+
+
+def zeros_like_stack(stacked_params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                        stacked_params)
+
+
+def stacked_sgd_init(stacked_params: Params) -> dict:
+    """SGD-momentum state with per-client step counters."""
+    k = jax.tree.leaves(stacked_params)[0].shape[0]
+    return {"vel": zeros_like_stack(stacked_params),
+            "step": jnp.zeros((k,), jnp.int32)}
+
+
+def expand_stack(tree: Params) -> Params:
+    """One pytree -> a K=1 stacked pytree (run a single model through the
+    stacked programs; invert with ``client_slice(..., 0)``)."""
+    return jax.tree.map(lambda p: p[None], tree)
+
+
+def client_slice(stacked: Params, c: int) -> Params:
+    """Client c's view of a stacked pytree."""
+    return jax.tree.map(lambda p: p[c], stacked)
+
+
+def stack_params(params_list: Sequence[Params]) -> Params:
+    """List of per-client pytrees -> stacked pytree (K on axis 0)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *params_list)
+
+
+def unstack_params(stacked: Params, k: int):
+    return [client_slice(stacked, i) for i in range(k)]

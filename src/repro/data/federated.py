@@ -1,10 +1,62 @@
 """Federated data plumbing: stratified K-folds (Algorithm 1), client shards,
-Dirichlet non-IID splits, and the per-round public-set rotation."""
+Dirichlet non-IID splits, the per-round public-set rotation, and the
+fixed-shape per-round batch plans the vmapped round engine scans over."""
 from __future__ import annotations
 
 from typing import List, Sequence, Tuple
 
 import numpy as np
+
+
+def round_batch_indices(folds: Sequence[np.ndarray], local_epochs: int,
+                        batch_size: int, seed: int = 0
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fixed-shape batch plan for one round of the vmapped round engine.
+
+    ``folds``: one index array per client (possibly ragged).  Returns
+
+      idx  (K, T, B) int64  — gather plan, T = local_epochs * max_c steps_c
+                              with steps_c = len(fold_c) // batch_size
+      mask (K, T) float32   — 1 where the batch is a real update for that
+                              client, 0 where it is shape padding
+
+    Per epoch every client makes one drop-last pass over a fresh
+    permutation of its fold — the same batch budget as a per-client Python
+    loop.  Clients with fewer examples than the widest client get padding
+    steps (cycled indices, masked out of the optimiser update) so the
+    whole round is one ``vmap(lax.scan)``-able tensor.
+    """
+    K = len(folds)
+    steps = [len(f) // batch_size for f in folds]
+    max_steps = max(steps, default=0)
+    T = local_epochs * max_steps
+    idx = np.zeros((K, T, batch_size), np.int64)
+    mask = np.zeros((K, T), np.float32)
+    if T == 0:
+        return idx, mask
+    rng = np.random.default_rng(seed)
+    for c, fold in enumerate(folds):
+        if len(fold) == 0:
+            continue                       # fully masked; zeros never used
+        for e in range(local_epochs):
+            perm = fold[rng.permutation(len(fold))]
+            t0 = e * max_steps
+            idx[c, t0:t0 + max_steps] = np.resize(perm,
+                                                  (max_steps, batch_size))
+            mask[c, t0:t0 + steps[c]] = 1.0
+    return idx, mask
+
+
+class _RoundPlanMixin:
+    """Shared ``pop_round``: K client folds popped in Algorithm-1 order,
+    compiled into the fixed-shape (K, T, B) plan above."""
+
+    def pop_round(self, n_clients: int, local_epochs: int, batch_size: int,
+                  seed: int = 0):
+        folds = [self.pop() for _ in range(n_clients)]
+        idx, mask = round_batch_indices(folds, local_epochs, batch_size,
+                                        seed=seed)
+        return folds, idx, mask
 
 
 def stratified_k_folds(labels: np.ndarray, n_folds: int,
@@ -26,7 +78,7 @@ def stratified_k_folds(labels: np.ndarray, n_folds: int,
     return out
 
 
-class FoldScheduler:
+class FoldScheduler(_RoundPlanMixin):
     """Algorithm 1's ``Fold.pop()`` discipline.
 
     Fold count = (1 + K) * rounds + 1: one fold to initialise the global
@@ -50,7 +102,7 @@ class FoldScheduler:
         return self.n_folds - self._cursor
 
 
-class NonIIDScheduler:
+class NonIIDScheduler(_RoundPlanMixin):
     """Fold discipline with Dirichlet(alpha) class skew per client
     (the paper's §VI future-work setting).
 

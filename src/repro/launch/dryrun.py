@@ -279,15 +279,23 @@ def build_case(cfg, shape, mesh, method: str, unroll: bool = False,
 
 # ---------------------------------------------------------------------------
 
-def _costs(compiled) -> Dict[str, float]:
+def cost_dict(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() across jax versions (list-of-dicts before 0.6)."""
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def _costs(compiled) -> Dict[str, float]:
+    cost = cost_dict(compiled)
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
             "coll": collective_stats(compiled.as_text())}
 
 
 def _lower_compile(step, args, in_shardings, mesh):
-    with jax.set_mesh(mesh):
+    with shd.use_mesh(mesh):
         lowered = jax.jit(step, in_shardings=in_shardings).lower(*args)
         return lowered.compile()
 

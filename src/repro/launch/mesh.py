@@ -10,20 +10,20 @@ from dataclasses import dataclass
 
 import jax
 
+from repro.sharding import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """single-pod: (data=16, model=16) = 256 chips;
     multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_cpu_mesh(shape=(2, 2), axes=("data", "model")):
     """Small host-device mesh for tests (requires the XLA host-device flag)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 @dataclass(frozen=True)

@@ -53,25 +53,87 @@ def shallow_deep_split(params: Dict):
     return shallow
 
 
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv_raw(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME", dimension_numbers=_DN)
+
+
 def _conv2d(x, w, b):
-    out = jax.lax.conv_general_dilated(
-        x, w, window_strides=(1, 1), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return out + b
+    return _conv_raw(x, w) + b
+
+
+@jax.custom_vjp
+def _conv2d_fused(x, w, b):
+    """Same conv, vmap-friendly gradient.
+
+    vmapping the stock conv over per-client weights makes XLA's autodiff
+    emit grouped-conv gradient kernels that fall off the fast path on CPU
+    (measured 8x slower than K separate convs).  This VJP keeps both
+    backward operands on fast paths: dx is a forward-style conv with the
+    spatially-flipped, in/out-swapped kernel (grouped conv FORWARD is
+    fine), and dw is an im2col matmul, which vmap turns into a batched
+    GEMM.  Assumes odd kernel, stride 1, SAME — the VisionNet setting.
+    """
+    return _conv2d(x, w, b)
+
+
+def _conv2d_fused_fwd(x, w, b):
+    return _conv2d(x, w, b), (x, w)
+
+
+def _shift_patches(x, k):
+    """(B,H,W,C) -> (B,H,W,k,k,C) SAME patches via pad + k² slices — pure
+    data movement (conv_general_dilated_patches lowers to a grouped conv,
+    which is the slow path this VJP exists to avoid)."""
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    H, W = x.shape[1], x.shape[2]
+    rows = [jnp.stack([xp[:, i:i + H, j:j + W, :] for j in range(k)], axis=3)
+            for i in range(k)]
+    return jnp.stack(rows, axis=3)
+
+
+def _conv2d_fused_bwd(res, g):
+    x, w = res
+    kh, _, _, _ = w.shape
+    w_t = jnp.flip(w, (0, 1)).transpose(0, 1, 3, 2)         # (kh,kw,cout,cin)
+    dx = jax.lax.conv_general_dilated(
+        g, w_t, window_strides=(1, 1), padding="SAME", dimension_numbers=_DN)
+    dw = jnp.einsum("bhwijc,bhwo->ijco", _shift_patches(x, kh), g)
+    return dx, dw, jnp.sum(g, (0, 1, 2))
+
+
+_conv2d_fused.defvjp(_conv2d_fused_fwd, _conv2d_fused_bwd)
+
+_CONV_IMPLS = {"native": _conv2d, "fused": _conv2d_fused}
 
 
 def _max_pool(x):
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    """2x2/stride-2 max-pool via reshape (== VALID reduce_window, but its
+    backward is a cheap argmax-where instead of XLA's select-and-scatter,
+    which is very slow on CPU)."""
+    b, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
 
 
 def visionnet_forward(params: Dict, cfg: VisionNetConfig, images,
                       *, train: bool = False,
-                      dropout_key: Optional[jax.Array] = None):
-    """images: (B, H, W, C) in [0, 1].  Returns sigmoid-prob (B,) fp32."""
+                      dropout_key: Optional[jax.Array] = None,
+                      conv_impl: str = "native"):
+    """images: (B, H, W, C) in [0, 1].  Returns sigmoid-prob (B,) fp32.
+
+    ``conv_impl``: 'native' (stock conv) or 'fused' (custom-VJP conv whose
+    backward stays fast when the forward is vmapped over per-client
+    weights — the stacked round engine's setting).
+    """
+    conv = _CONV_IMPLS[conv_impl]
     x = images.astype(jnp.float32)
     for i, cp in enumerate(params["conv"]):
-        x = jax.nn.relu(_conv2d(x, cp["w"], cp["b"]))
+        x = jax.nn.relu(conv(x, cp["w"], cp["b"]))
         if i < 2:
             x = _max_pool(x)
     x = x.reshape(x.shape[0], -1)

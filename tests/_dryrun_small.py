@@ -17,8 +17,7 @@ from repro.launch import dryrun as DR
 
 
 def small_mesh():
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return shd.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def main():
@@ -32,11 +31,11 @@ def main():
              if method in ("dml", "mutual", "fedavg_sync") else {})
     with shd.axis_rules(rules):
         step, args, shards = DR.build_case(cfg, shape, mesh, method)
-        with jax.set_mesh(mesh):
+        with shd.use_mesh(mesh):
             lowered = jax.jit(step, in_shardings=shards).lower(*args)
             compiled = lowered.compile()
     stats = DR.collective_stats(compiled.as_text(), pod_stride=4)
-    cost = compiled.cost_analysis()
+    cost = DR.cost_dict(compiled)
     assert cost.get("flops", 0) > 0 or method == "fedavg_sync"
     print(f"OK {arch} {method} {kind} collectives={int(stats['count'])} "
           f"pod_axis={stats['pod_axis']:.0f}")

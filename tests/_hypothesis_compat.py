@@ -1,0 +1,36 @@
+"""Property-test import shim: real hypothesis when installed, clean
+per-test skips when not (the package is optional — see
+requirements-dev.txt), so ``pytest -x -q`` always collects the suite.
+
+Usage in test modules:  ``from _hypothesis_compat import given, settings, st``
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                           # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _Strategies:
+        """Stand-in for ``hypothesis.strategies`` — strategy constructors
+        are only evaluated inside ``@given(...)`` calls, whose result is
+        discarded by the skip decorator above."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -1,7 +1,7 @@
 """Data substrate: generators, sharding, fold discipline, determinism."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import federated as fd
 from repro.data import synthetic as syn

@@ -136,6 +136,116 @@ def test_engine_non_iid_round():
     assert len(h.rounds) == 1 and all(np.isfinite(h.client_test_acc))
 
 
+def test_schedulers_pop_order_parity():
+    """NonIIDScheduler must follow FoldScheduler's Algorithm-1 pop order:
+    one shared init fold, then per round K client folds + one shared fold,
+    with identical budgets and identical ``remaining()`` trajectories."""
+    from repro.data.federated import NonIIDScheduler
+    labels = np.arange(660) % 2
+    K, R = 3, 4
+    iid = FoldScheduler(labels, K, R, seed=0)
+    nid = NonIIDScheduler(labels, K, R, alpha=0.2, seed=0)
+    assert iid.n_folds == nid.n_folds == (1 + K) * R + 1
+    assert iid.remaining() == nid.remaining() == iid.n_folds
+    iid.pop(); nid.pop()                     # shared init fold
+    for r in range(R):
+        for c in range(K):
+            iid.pop(); nid.pop()
+            assert iid.remaining() == nid.remaining()
+        pub_i, pub_n = iid.pop(), nid.pop()  # shared per-round fold
+        # shared folds stay class-balanced under both disciplines
+        assert 0.3 < labels[pub_i].mean() < 0.7
+        assert 0.3 < labels[pub_n].mean() < 0.7
+    assert iid.remaining() == nid.remaining() == 0
+    for sch in (iid, nid):
+        with pytest.raises(AssertionError):
+            sch.pop()
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.3])
+def test_pop_round_budget_exhaustion(alpha):
+    """pop_round consumes exactly K folds/round; the budget runs dry at
+    the Algorithm-1 count for both scheduler flavours."""
+    from repro.data.federated import NonIIDScheduler
+    labels = np.arange(500) % 2
+    K, R = 2, 3
+    sch = (NonIIDScheduler(labels, K, R, alpha=alpha, seed=1) if alpha
+           else FoldScheduler(labels, K, R, seed=1))
+    sch.pop()                                       # init fold
+    for r in range(R):
+        folds, idx, mask = sch.pop_round(K, local_epochs=2, batch_size=8)
+        assert len(folds) == K
+        assert sch.remaining() == (K + 1) * (R - r) - K
+        sch.pop()                                   # shared fold
+    assert sch.remaining() == 0
+    with pytest.raises(AssertionError):
+        sch.pop_round(K, 2, 8)
+
+
+def test_round_batch_indices_fixed_shape():
+    """The (K, T, B) plan: T = epochs * max steps, per-epoch drop-last
+    permutations, real steps unmasked, padding masked and cycled."""
+    from repro.data.federated import round_batch_indices
+    big = np.arange(100, 180)          # 80 -> 5 steps of 16
+    small = np.arange(500, 535)        # 35 -> 2 steps of 16
+    idx, mask = round_batch_indices([big, small], local_epochs=2,
+                                    batch_size=16, seed=3)
+    assert idx.shape == (2, 10, 16) and mask.shape == (2, 10)
+    # client 0: every step real; client 1: 2 of 5 per epoch
+    assert mask[0].tolist() == [1.0] * 10
+    assert mask[1].tolist() == [1, 1, 0, 0, 0] * 2
+    # indices come only from the right fold
+    assert set(idx[0].ravel()) <= set(big.tolist())
+    assert set(idx[1].ravel()) <= set(small.tolist())
+    # real steps within one epoch never repeat an example (permutation)
+    epoch0 = idx[0, :5].ravel()
+    assert len(np.unique(epoch0)) == len(epoch0)
+    real1 = idx[1, :2].ravel()
+    assert len(np.unique(real1)) == len(real1)
+    # deterministic in seed
+    idx2, _ = round_batch_indices([big, small], 2, 16, seed=3)
+    np.testing.assert_array_equal(idx, idx2)
+    # empty fold: fully masked, shape preserved
+    idx3, mask3 = round_batch_indices([big, np.array([], np.int64)], 1, 16)
+    assert idx3.shape == (2, 5, 16) and mask3[1].sum() == 0
+
+
+def test_dml_round_is_three_dispatches_k5():
+    """Acceptance: a full DML round for K=5 executes as <= 3 jitted program
+    dispatches (vmapped local scan, shared predict, fused mutual step) —
+    no per-client Python loop over batches."""
+    vn = reduced()
+    (tr_x, tr_y), _ = make_paper_datasets(image_size=vn.image_size,
+                                          n_train=600, n_test=40)
+    fc = FederatedConfig(method="dml", n_clients=5, rounds=2,
+                         local_epochs=2, batch_size=16)
+    tr = FederatedTrainer(vn, fc, tr_x, tr_y)
+    tr.run()
+    for r in range(fc.rounds):
+        progs = [p for rr, p in tr.dispatch_log if rr == r]
+        assert len(progs) <= 3, progs
+        assert progs.count("local_scan") == 1
+        assert progs.count("mutual_scan") == 1
+
+
+def test_comm_accounting_scales_with_mutual_epochs():
+    """Sharing happens EVERY mutual epoch: comm_bytes = E * 2K * B_pub * 4,
+    and zero (not NameError) when mutual_epochs == 0."""
+    vn = reduced()
+    (tr_x, tr_y), _ = make_paper_datasets(image_size=vn.image_size,
+                                          n_train=240, n_test=40)
+    comm = {}
+    for me in (0, 1, 3):
+        fc = FederatedConfig(method="dml", n_clients=2, rounds=1,
+                             local_epochs=1, batch_size=16, mutual_epochs=me)
+        tr = FederatedTrainer(vn, fc, tr_x, tr_y)
+        h = tr.run()
+        comm[me] = h.total_comm_bytes
+        assert h.rounds[0].comm_bytes == h.total_comm_bytes
+    assert comm[0] == 0
+    assert comm[3] == 3 * comm[1] > 0
+
+
 def test_dml_comm_orders_of_magnitude_smaller():
     """The paper's bandwidth claim on identical setups."""
     vn = reduced()
