@@ -3,14 +3,20 @@
   bench_table2   paper Table II: client accuracies, 3 frameworks (reduced)
   bench_history  paper Fig. 3/4: per-round training-loss history
   bench_comm     communication bytes/round (the bandwidth claim), CNN + LLM
+  bench_hetero   heterogeneous-client DML (transformer+SSM+MoE) incl.
+                 partial participation comm scaling
   bench_kernels  kernel wrappers: us_per_call + derived FLOP counts
 
-CSV convention: ``name,us_per_call,derived`` (plus labelled sections).
+Output: CSV-ish lines on stdout (``name,col,col,...``) AND a
+machine-readable ``BENCH_<table>.json`` per bench next to them (--out-dir,
+default cwd) — the perf-trajectory input for future PRs.
 Run: PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -25,6 +31,24 @@ from repro.data.synthetic import make_paper_datasets
 from repro.kernels import ref
 
 FAST = False
+OUT_DIR = "."
+
+# section -> list of row dicts; cleared before each bench fn and dumped to
+# BENCH_<bench>.json right after it, so stdout CSV and JSON never diverge
+_ROWS: dict = {}
+
+
+def row(section: str, **cols) -> None:
+    """Record one result row: CSV-ish on stdout + collected for the JSON."""
+    _ROWS.setdefault(section, []).append(cols)
+    print(",".join([section] + [str(v) for v in cols.values()]))
+
+
+def _dump_json(bench: str, seconds: float) -> None:
+    path = os.path.join(OUT_DIR, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "seconds": round(seconds, 1),
+                   "fast": FAST, "sections": _ROWS}, f, indent=2)
 
 
 def _fed_runs(rounds=6, n_train=2000, n_test=600, clients=5):
@@ -62,9 +86,11 @@ def bench_table2() -> None:
              "dml": "mutual_learning_fl_ours"}
     for method, h in _runs().items():
         for c, acc in enumerate(h.client_test_acc):
-            print(f"table2,{names[method]},client{c},{100 * acc:.2f}")
+            row("table2", framework=names[method], client=f"client{c}",
+                accuracy_pct=round(100 * acc, 2))
         spread = 100 * (max(h.client_test_acc) - min(h.client_test_acc))
-        print(f"table2,{names[method]},spread_pct,{spread:.2f}")
+        row("table2", framework=names[method], client="spread_pct",
+            accuracy_pct=round(spread, 2))
 
 
 def bench_history() -> None:
@@ -72,15 +98,17 @@ def bench_history() -> None:
     print("\n# history: framework,round,mean_client_loss,mean_kl")
     for method, h in _runs().items():
         for r in h.rounds:
-            print(f"history,{method},{r.round},"
-                  f"{np.mean(r.client_loss):.4f},{np.mean(r.kl_loss):.5f}")
+            row("history", framework=method, round=r.round,
+                mean_client_loss=round(float(np.mean(r.client_loss)), 4),
+                mean_kl=round(float(np.mean(r.kl_loss)), 5))
 
 
 def bench_comm() -> None:
     """The bandwidth claim: measured CNN bytes + analytic LLM-scale table."""
     print("\n# comm: setting,method,bytes_per_federation")
     for method, h in _runs().items():
-        print(f"comm,visionnet,{method},{h.total_comm_bytes}")
+        row("comm", setting="visionnet", method=method,
+            bytes_per_federation=h.total_comm_bytes)
     print("# comm_llm: arch,fedavg_bytes,dml_dense_bytes,dml_top64_bytes,"
           "dense_ratio,sparse_ratio (K=5 clients, 4096-token public set)")
     from repro.core.mutual import sparse_share_bytes
@@ -89,9 +117,10 @@ def bench_comm() -> None:
         cfg = get_config(arch)
         c = D.comm_bytes(cfg, n_clients=5, public_tokens=4096)
         sp = sparse_share_bytes(5, 4096, 64)
-        print(f"comm_llm,{arch},{c['fedavg_round']},{c['dml_round']},{sp},"
-              f"{c['fedavg_round'] / max(c['dml_round'], 1):.1f}x,"
-              f"{c['fedavg_round'] / sp:.0f}x")
+        row("comm_llm", arch=arch, fedavg_bytes=c["fedavg_round"],
+            dml_dense_bytes=c["dml_round"], dml_top64_bytes=sp,
+            dense_ratio=f"{c['fedavg_round'] / max(c['dml_round'], 1):.1f}x",
+            sparse_ratio=f"{c['fedavg_round'] / sp:.0f}x")
 
 
 def bench_noniid() -> None:
@@ -111,7 +140,8 @@ def bench_noniid() -> None:
             t.run()
             h = t.evaluate(te_x, te_y)
             for c, acc in enumerate(h.client_test_acc):
-                print(f"noniid,{method},{alpha},client{c},{100 * acc:.2f}")
+                row("noniid", framework=method, alpha=alpha,
+                    client=f"client{c}", accuracy_pct=round(100 * acc, 2))
 
 
 def bench_hard_task() -> None:
@@ -135,7 +165,46 @@ def bench_hard_task() -> None:
         t.run()
         h = t.evaluate(te_x, te_y)
         for c, acc in enumerate(h.client_test_acc):
-            print(f"hard_task,{method},client{c},{100 * acc:.2f}")
+            row("hard_task", framework=method, client=f"client{c}",
+                accuracy_pct=round(100 * acc, 2))
+
+
+def bench_hetero() -> None:
+    """Heterogeneous-client DML (the §I motivation): a dense transformer,
+    an attention-free SSM, and a fine-grained MoE federate by prediction
+    sharing — weight averaging is undefined across their pytrees.  Also
+    reports partial-participation (M < K) communication scaling."""
+    from repro.core.hetero import HeteroConfig, HeteroTrainer, make_lm_pool
+    archs = ("qwen3-4b", "mamba2-780m", "dbrx-132b")
+    rounds = 2 if FAST else 4
+    print("\n# hetero: participation,round,mean_local_loss,mean_kl,comm_bytes")
+    base = HeteroConfig(archs=archs, rounds=rounds, local_epochs=1,
+                        batch_size=4, public_batch=4, seed=0)
+    pool, labels = make_lm_pool(
+        ((1 + len(archs)) * rounds + 1) * 8, 32,
+        512, seed=0)
+    evals = {}
+    for m in (0, 2):                       # full vs 2-of-3 participation
+        hc = HeteroConfig(**{**base.__dict__, "participation": m})
+        tr = HeteroTrainer(hc, pool, labels)
+        h = tr.run()
+        for rl in h.rounds:
+            live = [rl.client_loss[c] for c in rl.participants]
+            row("hetero", participation=m or len(archs), round=rl.round,
+                mean_local_loss=round(float(np.mean(live)), 4),
+                mean_kl=round(float(np.mean(
+                    [rl.kl_loss[c] for c in rl.participants])), 5),
+                comm_bytes=rl.comm_bytes)
+        evals[m] = (tr.evaluate(), tr)
+    print("# hetero_eval: participation,client,arch,family,eval_loss,"
+          "total_comm_bytes")
+    for m, (h, tr) in evals.items():
+        for c, loss in enumerate(h.client_eval_loss):
+            row("hetero_eval", participation=m or len(archs),
+                client=f"client{c}", arch=archs[c],
+                family=tr._models[archs[c]].family,
+                eval_loss=round(loss, 4),
+                total_comm_bytes=h.total_comm_bytes)
 
 
 def _time_call(fn, *args, reps=3):
@@ -161,13 +230,15 @@ def bench_kernels() -> None:
     f = jax.jit(lambda x: ref.mutual_kl(x))
     us = _time_call(f, logits)
     flops = K * K * B * V * 4                 # softmax + pairwise terms
-    print(f"kernels,kl_mutual_ref,{us:.0f},{flops}")
+    row("kernels", name="kl_mutual_ref", us_per_call=round(us),
+        derived_flops=flops)
     # attention
     Bq, S, H, hd = 2, 512, 8, 64
     q = jax.random.normal(key, (Bq, S, H, hd))
     f = jax.jit(lambda q: ref.attention(q, q, q))
     us = _time_call(f, q)
-    print(f"kernels,attention_ref,{us:.0f},{4 * Bq * H * S * S * hd}")
+    row("kernels", name="attention_ref", us_per_call=round(us),
+        derived_flops=4 * Bq * H * S * S * hd)
     # SSD
     Bb, Sl, Hh, P, G, N = 2, 1024, 8, 64, 1, 128
     x = jax.random.normal(key, (Bb, Sl, Hh, P))
@@ -177,7 +248,8 @@ def bench_kernels() -> None:
     f = jax.jit(lambda x, dt, Bm: ref.ssd(x, dt, A, Bm, Bm, chunk=256)[0])
     us = _time_call(f, x, dt, Bm)
     chunk_flops = Bb * Hh * (Sl * 256 * (N + P) + Sl * N * P * 3)
-    print(f"kernels,ssd_ref,{us:.0f},{chunk_flops}")
+    row("kernels", name="ssd_ref", us_per_call=round(us),
+        derived_flops=chunk_flops)
 
 
 BENCHES = {
@@ -186,25 +258,33 @@ BENCHES = {
     "comm": bench_comm,
     "hard_task": bench_hard_task,
     "noniid": bench_noniid,
+    "hetero": bench_hetero,
     "kernels": bench_kernels,
 }
 
 
 def main() -> None:
-    global FAST
+    global FAST, OUT_DIR
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", choices=sorted(BENCHES), default=None,
                     help="run a single bench section")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<table>.json files")
     args, _ = ap.parse_known_args()
     FAST = args.fast
+    OUT_DIR = args.out_dir
+    os.makedirs(OUT_DIR, exist_ok=True)
     t0 = time.time()
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
         t1 = time.time()
+        _ROWS.clear()
         fn()
-        print(f"# section_seconds,{name},{time.time() - t1:.1f}")
+        dt = time.time() - t1
+        _dump_json(name, dt)
+        print(f"# section_seconds,{name},{dt:.1f}")
     print(f"\n# total_bench_seconds,{time.time() - t0:.0f}")
 
 

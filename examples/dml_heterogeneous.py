@@ -1,82 +1,40 @@
 """Beyond-weight-sharing: federated mutual learning across HETEROGENEOUS
 architectures — a dense transformer, an attention-free SSM, and a
-fine-grained MoE learn from each other.  Weight averaging is impossible
-here (the pytrees don't even match); loss sharing doesn't care.  This is
-the paper's §I motivation ("different IoT devices ... might use different
-architectures") demonstrated at the model-family level.
+fine-grained MoE learn from each other through `repro.core.hetero`, the
+engine version of the paper's §I motivation ("different IoT devices ...
+might use different architectures").  Weight averaging is impossible here
+(the pytrees don't even match); loss sharing doesn't care — only the
+(K, N_pub, V) public-set logits ever cross a client boundary.
 
   PYTHONPATH=src python examples/dml_heterogeneous.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_reduced
-from repro.core.mutual import mutual_kl_terms
-from repro.data.synthetic import make_token_stream
-from repro.models import transformer as tfm
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.core.hetero import HeteroConfig, HeteroTrainer, make_lm_pool
 
-ARCHS = ["qwen3-4b", "mamba2-780m", "dbrx-132b"]   # dense / ssm / moe
-B, S, STEPS = 2, 48, 12
-KL_W = 2.0
+ARCHS = ("qwen3-4b", "mamba2-780m", "dbrx-132b")   # dense / ssm / moe
+ROUNDS = 4
 
-cfgs = [get_reduced(a) for a in ARCHS]
-V = cfgs[0].vocab_size
-assert all(c.vocab_size == V for c in cfgs), "shared tokenizer/vocab required"
+cfg = HeteroConfig(archs=ARCHS, rounds=ROUNDS, local_epochs=1, batch_size=4,
+                   public_batch=4, lr=3e-3, kl_weight=2.0, seed=0)
+pool, labels = make_lm_pool(((1 + len(ARCHS)) * ROUNDS + 1) * 8,
+                            seq_len=48, vocab=512, seed=0)
+trainer = HeteroTrainer(cfg, pool, labels)
 
-keys = jax.random.split(jax.random.PRNGKey(0), len(cfgs))
-params = [tfm.init_model(k, c) for k, c in zip(keys, cfgs)]
-opts = [adamw_init(p) for p in params]
-opt_cfg = AdamWConfig(lr=3e-3, warmup=3, total_steps=STEPS)
+print("federating:", ", ".join(
+    f"{a} ({trainer._models[a].family})" for a in ARCHS))
+history = trainer.run()
+for rl in history.rounds:
+    print(f"round {rl.round:3d}  local={['%.3f' % x for x in rl.client_loss]}"
+          f"  cross-arch kld={['%.4f' % x for x in rl.kl_loss]}"
+          f"  comm_bytes={rl.comm_bytes}")
 
-
-def make_client_step(cfg):
-    def client_loss(p, toks, pub, others_logits):
-        loss_priv, _ = tfm.loss_fn(p, cfg, toks)
-        my_logits, _ = tfm.forward(p, cfg, pub)
-        stack = jnp.concatenate(
-            [my_logits.reshape(1, -1, V),
-             jax.lax.stop_gradient(others_logits)], axis=0)
-        kl = mutual_kl_terms(stack, jax.lax.stop_gradient(stack))[0]
-        return loss_priv + KL_W * jnp.mean(kl), loss_priv
-
-    @jax.jit
-    def step(p, opt, toks, pub, others_logits):
-        (_, priv), grads = jax.value_and_grad(client_loss, has_aux=True)(
-            p, toks, pub, others_logits)
-        p2, opt2, _ = adamw_update(p, grads, opt, opt_cfg)
-        return p2, opt2, priv
-
-    @jax.jit
-    def predict(p, pub):
-        logits, _ = tfm.forward(p, cfg, pub)
-        return logits.reshape(-1, V)
-    return step, predict
-
-
-clients = [make_client_step(c) for c in cfgs]
-
-print("federating:", ", ".join(f"{a} ({c.family})"
-                               for a, c in zip(ARCHS, cfgs)))
-for i in range(STEPS):
-    pub = jnp.asarray(make_token_stream(B, S, V, seed=9000 + i, domain=9))
-    # 1) every client publishes its predictions on the public batch
-    all_logits = jnp.stack([pred(p, pub)
-                            for (_, pred), p in zip(clients, params)])
-    # 2) each client descends Eq. 1 with the received predictions fixed
-    privs = []
-    for c, ((step, _), cfg) in enumerate(zip(clients, cfgs)):
-        toks = jnp.asarray(make_token_stream(B, S, V, seed=100 * i + c,
-                                             domain=c))
-        others = jnp.delete(all_logits, c, axis=0)
-        params[c], opts[c], priv = step(params[c], opts[c], toks, pub, others)
-        privs.append(float(priv))
-    # consensus across *different architectures*
-    kl = mutual_kl_terms(all_logits, all_logits)
-    if i % 3 == 0 or i == STEPS - 1:
-        print(f"step {i:3d}  private={['%.3f' % p for p in privs]}  "
-              f"cross-arch kld_avg={float(jnp.mean(kl)):.5f}")
-
+trainer.evaluate()
+print(f"\nheld-out eval loss per client: "
+      f"{['%.3f' % x for x in history.client_eval_loss]}")
+print(f"total logits traffic: {history.total_comm_bytes} bytes "
+      f"(vs per-round weight averaging: undefined — "
+      f"client pytrees have {[f'{n:,}' for n in trainer.n_params]} params "
+      f"and different structures)")
 print("\nweight averaging across these clients is undefined "
       "(different pytrees); prediction sharing just worked.")

@@ -97,13 +97,15 @@ def make_local_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     return step
 
 
-def _mutual_term(flat, temperature, sparse_k):
+def _mutual_term(flat, temperature, sparse_k, part_mask=None):
     """Eq. 2 term: dense (full logits gathered) or sparse top-k sharing."""
     if sparse_k:
+        assert part_mask is None, \
+            "sparse top-k sharing + partial participation not supported yet"
         idx, logp_top = topk_predictions(
             jax.lax.stop_gradient(flat), sparse_k, temperature)
         return sparse_mutual_kl_loss(flat, idx, logp_top, temperature)
-    return mutual_kl_loss(flat, temperature)
+    return mutual_kl_loss(flat, temperature, part_mask=part_mask)
 
 
 def make_mutual_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
@@ -115,8 +117,14 @@ def make_mutual_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
 
     public tokens: (B_pub, S_tok) — same data for every client (that is the
     point); per-client logits differ because params differ.
+
+    ``part_mask`` (K,) 0/1 enables partial participation: absentees are
+    masked out of the Eq.-2 average and their params/opt pass through
+    unchanged (the AdamW schedule step is shared fleet-wide and still
+    advances).
     """
-    def step(stacked_params, opt_state, public_tokens, public_prefix=None):
+    def step(stacked_params, opt_state, public_tokens, public_prefix=None,
+             part_mask=None):
         def total_loss(sp):
             if public_prefix is None:
                 losses, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
@@ -128,13 +136,19 @@ def make_mutual_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                                                     public_prefix, remat, unroll))(sp)
             K, B, S, V = fwd.shape
             flat = constrain(fwd.reshape(K, B * S, V), "client", None, "vocab")
-            kl = _mutual_term(flat, temperature, sparse_k)   # (K,)
-            total = ce_weight * jnp.sum(losses) + kl_weight * jnp.sum(kl)
+            kl = _mutual_term(flat, temperature, sparse_k, part_mask)  # (K,)
+            pm = 1.0 if part_mask is None else jnp.asarray(part_mask,
+                                                           jnp.float32)
+            total = (ce_weight * jnp.sum(losses * pm)
+                     + kl_weight * jnp.sum(kl))
             return total, {"public_ce": losses, "kld_avg": kl}
         (_, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(
             stacked_params)
         new_params, new_opt, om = adamw_update(stacked_params, grads,
                                                opt_state, opt_cfg)
+        if part_mask is not None:
+            new_params, new_opt = _mask_participation(
+                stacked_params, opt_state, new_params, new_opt, part_mask)
         return new_params, new_opt, {**metrics, **om}
     return step
 
@@ -153,13 +167,26 @@ def _public_ce_and_logits(params, cfg, tokens, prefix, remat, unroll=False):
     return ce, logits[:, P:] if P else logits
 
 
+def _mask_participation(old_params, old_opt, new_params, new_opt, part_mask):
+    """Absent clients keep params and AdamW moments; the (shared, scalar)
+    schedule step keeps advancing."""
+    params = stacking.client_lerp(old_params, new_params, part_mask)
+    opt = {"mu": stacking.client_lerp(old_opt["mu"], new_opt["mu"], part_mask),
+           "nu": stacking.client_lerp(old_opt["nu"], new_opt["nu"], part_mask),
+           "step": new_opt["step"]}
+    return params, opt
+
+
 def make_dml_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                         kl_weight: float = 1.0, temperature: float = 1.0,
                         remat: bool = True, unroll: bool = False,
                         sparse_k: int = 0, spmd_client_axis=None):
-    """One fused DML round-step: private CE + Eq. 1 on the public batch."""
+    """One fused DML round-step: private CE + Eq. 1 on the public batch.
+
+    ``part_mask`` (K,) 0/1 enables partial participation (see
+    ``make_mutual_step``)."""
     def step(stacked_params, opt_state, tokens, public_tokens,
-             prefix=None, public_prefix=None):
+             prefix=None, public_prefix=None, part_mask=None):
         def total_loss(sp):
             if prefix is None:
                 priv, pm = _cvmap(spmd_axis_name=spmd_client_axis)(
@@ -177,14 +204,20 @@ def make_dml_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                                                     public_prefix, remat, unroll))(sp)
             K, B, S, V = fwd.shape
             flat = constrain(fwd.reshape(K, B * S, V), "client", None, "vocab")
-            kl = _mutual_term(flat, temperature, sparse_k)
-            total = jnp.sum(priv) + jnp.sum(ce_pub) + kl_weight * jnp.sum(kl)
+            kl = _mutual_term(flat, temperature, sparse_k, part_mask)
+            w = 1.0 if part_mask is None else jnp.asarray(part_mask,
+                                                          jnp.float32)
+            total = (jnp.sum(priv * w) + jnp.sum(ce_pub * w)
+                     + kl_weight * jnp.sum(kl))
             return total, {"private_loss": priv, "public_ce": ce_pub,
                            "kld_avg": kl}
         (_, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(
             stacked_params)
         new_params, new_opt, om = adamw_update(stacked_params, grads,
                                                opt_state, opt_cfg)
+        if part_mask is not None:
+            new_params, new_opt = _mask_participation(
+                stacked_params, opt_state, new_params, new_opt, part_mask)
         return new_params, new_opt, {**metrics, **om}
     return step
 
@@ -192,12 +225,19 @@ def make_dml_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
 # ---------------------------------------------------------------------------
 # weight-sharing baselines on the client axis
 
-def fedavg_sync(stacked_params: Params) -> Params:
-    """All-reduce(params)/K over the client axis (vanilla FL round)."""
-    def avg(p):
-        m = jnp.mean(p.astype(jnp.float32), axis=0, keepdims=True)
-        return jnp.broadcast_to(m, p.shape).astype(p.dtype)
-    return jax.tree.map(avg, stacked_params)
+def fedavg_sync(stacked_params: Params, part_mask=None) -> Params:
+    """All-reduce(params)/K over the client axis (vanilla FL round).
+
+    With ``part_mask`` (K,) 0/1, only participants are averaged and only
+    participants receive the aggregate back (absentees are offline)."""
+    if part_mask is None:
+        def avg(p):
+            m = jnp.mean(p.astype(jnp.float32), axis=0, keepdims=True)
+            return jnp.broadcast_to(m, p.shape).astype(p.dtype)
+        return jax.tree.map(avg, stacked_params)
+    from repro.core.fedavg import weighted_average_weights
+    avg = weighted_average_weights(stacked_params, part_mask)
+    return stacking.client_lerp(stacked_params, avg, part_mask)
 
 
 def transformer_shallow_mask(cfg: ModelConfig, stacked_params: Params):

@@ -26,6 +26,7 @@ Communication bytes are accounted per round for the bandwidth claim.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -34,11 +35,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint
 from repro.configs.visionnet import VisionNetConfig
 from repro.core import async_fl, fedavg, stacking
 from repro.core.mutual import bernoulli_mutual_loss
 from repro.data.federated import (FoldScheduler, NonIIDScheduler,
-                                  round_batch_indices)
+                                  round_batch_indices, sample_participants)
 from repro.models.visionnet import (bce_loss, init_visionnet,
                                     shallow_deep_split, visionnet_forward)
 from repro.optim import SGDConfig, sgd_init, sgd_update
@@ -61,6 +63,10 @@ class FederatedConfig:
     # async
     delta: int = 3
     min_round: int = 5
+    # partial participation: sample M <= K clients per round (0 -> all K);
+    # non-participants are excluded from the Eq.-2 average via masking and
+    # keep their params/opt untouched; comm costs scale with M
+    participation: int = 0
     # non-IID client data (paper §VI future work): Dirichlet(alpha) class
     # skew per client; 0 -> IID stratified folds (the paper's setting)
     non_iid_alpha: float = 0.0
@@ -75,6 +81,7 @@ class RoundLog:
     kl_loss: List[float]
     comm_bytes: int
     layer: Optional[str] = None
+    participants: Optional[List[int]] = None      # None -> full participation
 
 
 @dataclass
@@ -134,15 +141,17 @@ def _local_scan(stacked_params, stacked_opt, images, labels, masks, keys,
 @functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
                                              "kl_weight", "conv_impl"))
 def _mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels, keys,
-                 vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                 part_mask, vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
                  kl_weight: float, conv_impl: str = "fused"):
     """All mutual epochs for all K clients, fused into one program.
 
-    keys (E, K, 2).  Per epoch: every client shares its dropout-free
-    predictions on the public fold (what actually goes over the wire),
-    then descends Eq. 1 — BCE + kl_weight · KLD vs the received tensor
-    held fixed (``bernoulli_mutual_loss``).  Returns the final epoch's
-    per-client (total loss, bce, kld), each (K,).
+    keys (E, K, 2) · part_mask (K,) 0/1.  Per epoch: every participant
+    shares its dropout-free predictions on the public fold (what actually
+    goes over the wire), then descends Eq. 1 — BCE + kl_weight · KLD vs the
+    received tensor held fixed (``bernoulli_mutual_loss``).  Partial
+    participation masks absentees out of the Eq.-2 average AND out of the
+    update (their params/opt ride through unchanged).  Returns the final
+    epoch's per-client (total loss, bce, kld), each (K,).
     """
 
     def epoch(carry, ks):
@@ -158,15 +167,21 @@ def _mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels, keys,
                                                conv_impl=conv_impl)
             )(sp, ks)                                               # (K,B)
             bce = jax.vmap(lambda pr: bce_loss(pr, pub_labels))(live)
-            kld = bernoulli_mutual_loss(live, fixed_probs=shared)   # (K,)
-            return jnp.sum(bce) + kl_weight * jnp.sum(kld), (bce, kld)
+            kld = bernoulli_mutual_loss(live, fixed_probs=shared,
+                                        part_mask=part_mask)        # (K,)
+            return (jnp.sum(bce * part_mask) + kl_weight * jnp.sum(kld),
+                    (bce, kld))
 
         (_, (bce, kld)), grads = jax.value_and_grad(
             total_loss, has_aux=True)(params)
         # per-client update so grad clipping stays per client, exactly as
         # in the per-client loop this replaces
-        params, opt, _ = jax.vmap(
+        new_p, new_o, _ = jax.vmap(
             lambda q, g, o: sgd_update(q, g, o, sgd_cfg))(params, grads, opt)
+        params = jax.vmap(_masked_lerp)(params, new_p, part_mask)
+        opt = {"vel": jax.vmap(_masked_lerp)(opt["vel"], new_o["vel"],
+                                             part_mask),
+               "step": opt["step"] + part_mask.astype(jnp.int32)}
         return (params, opt), (bce + kl_weight * kld, bce, kld)
 
     (stacked_params, stacked_opt), (loss, bce, kld) = jax.lax.scan(
@@ -236,8 +251,20 @@ class FederatedTrainer:
         self.n_params = sum(p.size for p in jax.tree.leaves(self.global_params))
         self.shallow_mask = shallow_deep_split(self.global_params)
         self.history = History()
+        self._next_round = 0
 
     # -- helpers ----------------------------------------------------------
+    def participants(self, r: int) -> List[int]:
+        """The M clients sampled for round r (stateless in r — resume-safe).
+        Full participation returns all K."""
+        return sample_participants(self.fed.n_clients, self.fed.participation,
+                                   self.fed.seed, r)
+
+    def _part_mask(self, part: List[int]) -> np.ndarray:
+        mask = np.zeros((self.fed.n_clients,), np.float32)
+        mask[part] = 1.0
+        return mask
+
     def _next_plan_seed(self) -> int:
         self._plan_seed += 1
         return self._plan_seed
@@ -270,15 +297,22 @@ class FederatedTrainer:
         self.global_opt = stacking.client_slice(go, 0)
         return float(losses[0])
 
-    def _local_round(self):
+    def _local_round(self, part_mask: Optional[np.ndarray] = None):
         """Pop K client folds and run every client's local epochs in ONE
-        vmapped scan dispatch.  Returns (folds, per-client mean loss)."""
+        vmapped scan dispatch.  Returns (folds, per-client mean loss).
+
+        ``part_mask`` (K,) 0/1 zeroes the whole batch plan of absent
+        clients — their params/opt ride through the scan untouched (the
+        masked-lerp padding path), exactly as if they never trained.
+        """
         K = self.fed.n_clients
         folds, idx, mask = self.folds.pop_round(
             K, self.fed.local_epochs, self.fed.batch_size,
             seed=self._next_plan_seed())
         if idx.shape[1] == 0:
             return folds, [0.0] * K
+        if part_mask is not None:
+            mask = mask * part_mask[:, None]
         imgs, labs = self._gather(idx)
         keys = self._split_keys(K, idx.shape[1])
         self.client_params, self.client_opts, losses = _local_scan(
@@ -319,70 +353,162 @@ class FederatedTrainer:
         return correct / len(images)
 
     # -- rounds -----------------------------------------------------------
-    def run(self) -> History:
-        for r in range(self.fed.rounds):
+    def run(self, until: int = 0) -> History:
+        """Run rounds up to ``until`` (0 -> cfg.rounds).  Picks up from the
+        round counter, so save_state/restore_state mid-run and a second
+        ``run()`` continue exactly where the checkpoint left off."""
+        stop = until or self.fed.rounds
+        for r in range(self._next_round, min(stop, self.fed.rounds)):
             self._round_idx = r
+            part = self.participants(r)
             if self.fed.method == "dml":
-                self._round_dml(r)
+                self._round_dml(r, part)
             elif self.fed.method == "fedavg":
-                self._round_fedavg(r)
+                self._round_fedavg(r, part)
             elif self.fed.method == "async":
-                self._round_async(r)
+                self._round_async(r, part)
             else:
                 raise ValueError(self.fed.method)
+            self._next_round = r + 1
         return self.history
 
-    def _round_dml(self, r: int):
+    def _log_round(self, r, part, losses, kls, comm, layer=None):
+        full = len(part) == self.fed.n_clients
+        self.history.total_comm_bytes += comm
+        self.history.rounds.append(RoundLog(
+            r, losses, kls, comm, layer=layer,
+            participants=None if full else part))
+
+    def _round_dml(self, r: int, part: List[int]):
         K = self.fed.n_clients
-        _, local_losses = self._local_round()
+        pm = self._part_mask(part)
+        _, local_losses = self._local_round(pm if len(part) < K else None)
         # public fold: rotating common test set from the server
         pub = self.folds.pop()
         kl_losses = [0.0] * K
         comm = 0
-        if self.fed.mutual_epochs > 0:
+        if self.fed.mutual_epochs > 0 and len(part) >= 2:
             pub_imgs = jnp.asarray(self.images[pub])
             pub_labs = jnp.asarray(self.labels[pub])
             keys = self._split_keys(self.fed.mutual_epochs, K)
             self.client_params, self.client_opts, (loss, _, kld) = \
                 _mutual_scan(self.client_params, self.client_opts, pub_imgs,
-                             pub_labs, keys, self.vn_cfg, self.sgd_cfg,
-                             self.fed.kl_weight,
+                             pub_labs, keys, jnp.asarray(pm), self.vn_cfg,
+                             self.sgd_cfg, self.fed.kl_weight,
                              conv_impl="fused" if K > 1 else "native")
             self.dispatch_log.append((r, "mutual_scan"))
-            local_losses = [float(x) for x in np.asarray(loss)]
+            local_losses = [float(x) * m for x, m in
+                            zip(np.asarray(loss), pm)]
             kl_losses = [float(x) for x in np.asarray(kld)]
-            # inference + sharing: each client ships (B_pub,) probabilities
-            # up and receives the (K, B_pub) broadcast down, EVERY epoch
-            comm = self.fed.mutual_epochs * 2 * K * len(pub) * 4
-        self.history.total_comm_bytes += comm
-        self.history.rounds.append(RoundLog(r, local_losses, kl_losses, comm))
+            # inference + sharing: each PARTICIPANT ships (B_pub,)
+            # probabilities up and receives the (M, B_pub) broadcast down,
+            # EVERY epoch — bytes scale with M, not K
+            comm = self.fed.mutual_epochs * 2 * len(part) * len(pub) * 4
+        self._log_round(r, part, local_losses, kl_losses, comm)
 
-    def _round_fedavg(self, r: int):
+    def _round_fedavg(self, r: int, part: List[int]):
         K = self.fed.n_clients
-        _, losses = self._local_round()
+        pm = self._part_mask(part)
+        _, losses = self._local_round(pm if len(part) < K else None)
         self.folds.pop()                                  # global fold unused
-        self.client_params = fedavg.average_weights(self.client_params)
-        self.global_params = stacking.client_slice(self.client_params, 0)
-        comm = fedavg.comm_bytes_per_round(self.n_params, K)
-        self.history.total_comm_bytes += comm
-        self.history.rounds.append(RoundLog(r, losses, [0.0] * K, comm))
+        if len(part) == K:
+            self.client_params = fedavg.average_weights(self.client_params)
+            avg = self.client_params
+        else:
+            # server averages the M participants; only they receive the
+            # broadcast back (absentees are offline this round)
+            avg = fedavg.weighted_average_weights(self.client_params,
+                                                  jnp.asarray(pm))
+            self.client_params = stacking.client_lerp(self.client_params,
+                                                      avg, pm)
+        self.global_params = stacking.client_slice(avg, 0)
+        comm = fedavg.comm_bytes_per_round(self.n_params, len(part))
+        self._log_round(r, part, losses, [0.0] * K, comm)
 
-    def _round_async(self, r: int):
+    def _round_async(self, r: int, part: List[int]):
         K = self.fed.n_clients
-        folds, losses = self._local_round()
+        pm = self._part_mask(part)
+        folds, losses = self._local_round(pm if len(part) < K else None)
         scores = self._fold_accuracies(folds)
-        self.client_params, layer = async_fl.async_round_update(
-            self.client_params, jnp.asarray(scores), self.shallow_mask, r,
+        # absentees contribute no weight to the aggregate and receive none
+        # of it back (scores masked -> their average weight is 0)
+        masked_scores = jnp.asarray(np.asarray(scores) * pm)
+        synced, layer = async_fl.async_round_update(
+            self.client_params, masked_scores, self.shallow_mask, r,
             self.fed.delta, self.fed.min_round)
-        # Algorithm 1 lines 17-18: G takes the average then trains on a fold
-        self.global_params = stacking.client_slice(self.client_params, 0)
+        # Algorithm 1 lines 17-18: G takes the aggregate then trains on a
+        # fold — sliced from the SYNCED tree (where every client received
+        # the round's average), not from the lerped one below where an
+        # absent client 0 would hand G its stale params
+        self.global_params = stacking.client_slice(synced, 0)
+        if len(part) < K:
+            synced = stacking.client_lerp(self.client_params, synced, pm)
+        self.client_params = synced
         self._train_single(self.folds.pop())
         n_sh, n_dp = async_fl.count_params_by_mask(self.global_params,
                                                    self.shallow_mask)
-        comm = async_fl.comm_bytes_per_round(n_sh, n_dp, K, layer)
-        self.history.total_comm_bytes += comm
-        self.history.rounds.append(RoundLog(r, losses, [0.0] * K, comm,
-                                            layer=layer))
+        comm = async_fl.comm_bytes_per_round(n_sh, n_dp, len(part), layer)
+        self._log_round(r, part, losses, [0.0] * K, comm, layer=layer)
+
+    # -- checkpoint/resume -------------------------------------------------
+    def save_state(self, path: str) -> None:
+        """Full federated state through ``repro.checkpoint``: the
+        client-stacked params + opt, the global model, the PRNG key, and
+        the round counter / fold cursor / plan seed needed to make a
+        resumed run bitwise-identical to an uninterrupted one."""
+        state = {
+            "client_params": self.client_params,
+            "client_opts": self.client_opts,
+            "global_params": self.global_params,
+            "global_opt": self.global_opt,
+            "key": jax.random.key_data(self.key)
+            if jnp.issubdtype(self.key.dtype, jax.dtypes.prng_key)
+            else self.key,
+        }
+        meta = {
+            "engine": "federated",
+            "method": self.fed.method,
+            "n_clients": self.fed.n_clients,
+            "n_rounds": self.fed.rounds,
+            "pool_n": len(self.labels),
+            "round": self._next_round,
+            "plan_seed": self._plan_seed,
+            "scheduler": self.folds.state(),
+            "total_comm_bytes": self.history.total_comm_bytes,
+            "rounds": [dataclasses.asdict(rl) for rl in self.history.rounds],
+        }
+        checkpoint.save(path, state, meta)
+
+    def restore_state(self, path: str) -> None:
+        """Load a ``save_state`` checkpoint into this trainer (must be
+        constructed with the same config and data pool)."""
+        state, meta = checkpoint.restore(path)
+        if meta.get("method") != self.fed.method or \
+                meta.get("n_clients") != self.fed.n_clients:
+            raise ValueError(
+                f"checkpoint ({meta.get('method')}, K={meta.get('n_clients')})"
+                f" != config ({self.fed.method}, K={self.fed.n_clients})")
+        # fold partition is deterministic in (labels, K, rounds, seed); a
+        # different schedule/pool would silently resume on the wrong folds
+        if meta.get("n_rounds", self.fed.rounds) != self.fed.rounds or \
+                meta.get("pool_n", len(self.labels)) != len(self.labels):
+            raise ValueError(
+                f"checkpoint schedule (rounds={meta.get('n_rounds')}, "
+                f"pool={meta.get('pool_n')}) != config "
+                f"(rounds={self.fed.rounds}, pool={len(self.labels)}); "
+                "resume needs the same fold partition — save with the full "
+                "round budget and stop early via run(until=...)")
+        self.client_params = state["client_params"]
+        self.client_opts = state["client_opts"]
+        self.global_params = state["global_params"]
+        self.global_opt = state["global_opt"]
+        self.key = jnp.asarray(state["key"])
+        self._next_round = int(meta["round"])
+        self._plan_seed = int(meta["plan_seed"])
+        self.folds.load_state(meta["scheduler"])
+        self.history = History(
+            rounds=[RoundLog(**d) for d in meta.get("rounds", [])],
+            total_comm_bytes=int(meta.get("total_comm_bytes", 0)))
 
     # -- final eval (paper Table II / Fig. 3) ------------------------------
     def evaluate(self, test_images: np.ndarray, test_labels: np.ndarray):

@@ -21,12 +21,32 @@ import jax.numpy as jnp
 from repro.kernels import ops, ref
 
 
-def mutual_kl_terms(live_logits, fixed_logits, temperature: float = 1.0):
+def _pair_mask(K: int, part_mask):
+    """(K, K) pair weights for the Eq.-2 average under partial participation.
+
+    ``part_mask`` is a (K,) 0/1 participation vector (None -> everyone).
+    Row i is zeroed when client i sits the round out; column j is excluded
+    from every average when client j shared nothing; the 1/(K-1) denominator
+    shrinks to 1/(M-1) where M = number of participants.
+    """
+    eye = jnp.eye(K, dtype=jnp.float32)
+    if part_mask is None:
+        return (1.0 - eye) / max(K - 1, 1)
+    m = jnp.asarray(part_mask, jnp.float32)
+    pair = m[:, None] * m[None, :] * (1.0 - eye)
+    denom = jnp.maximum(jnp.sum(m) - 1.0, 1.0)
+    return pair / denom
+
+
+def mutual_kl_terms(live_logits, fixed_logits, temperature: float = 1.0,
+                    part_mask=None):
     """Eq. 2 with the j-side fixed.  (K, B, V) x (K, B, V) -> (K, B).
 
     out[i, b] = 1/(K-1) sum_{j != i} KL(softmax(live_i) || softmax(fixed_j)).
     Pass ``fixed_logits = jax.lax.stop_gradient(live_logits)`` for the
     federated gradient semantics (others' predictions are received data).
+    ``part_mask`` (K,) 0/1 drops non-participants from both sides of the
+    average (partial participation: M <= K clients per round).
     """
     K = live_logits.shape[0]
     lp_live = jax.nn.log_softmax(
@@ -37,19 +57,42 @@ def mutual_kl_terms(live_logits, fixed_logits, temperature: float = 1.0):
     self_term = jnp.sum(p_live * lp_live, axis=-1)          # (K,B)
     cross = jnp.einsum("ibv,jbv->ijb", p_live, lp_fixed)    # (i,j,B)
     kl = self_term[:, None, :] - cross
-    mask = (1.0 - jnp.eye(K))[:, :, None]
-    return jnp.sum(kl * mask, axis=1) / max(K - 1, 1)
+    return jnp.sum(kl * _pair_mask(K, part_mask)[:, :, None], axis=1)
 
 
 def mutual_kl_loss(all_logits, temperature: float = 1.0,
-                   stop_grad_others: bool = True):
+                   stop_grad_others: bool = True, part_mask=None):
     """Per-client mean Eq.-2 loss from a live stacked logits tensor.
 
     all_logits: (K, B, V) (flatten (B, S) upstream).  Returns (K,) scalars.
     """
     fixed = jax.lax.stop_gradient(all_logits) if stop_grad_others else all_logits
-    terms = mutual_kl_terms(all_logits, fixed, temperature)
+    terms = mutual_kl_terms(all_logits, fixed, temperature,
+                            part_mask=part_mask)
     return jnp.mean(terms, axis=-1)
+
+
+def kl_to_received(live_logits, received_logits, temperature: float = 1.0):
+    """Eq. 2 for ONE client against the predictions it received.
+
+    live_logits: (B, V) — local, differentiable.
+    received_logits: (J, B, V) — the J other participants' shared logits
+    (treated as constants; stop_gradient applied here).
+
+    Returns (B,) = 1/J * sum_j KL(softmax(live) || softmax(received_j)).
+    The heterogeneous engine uses this: clients with different pytrees
+    cannot be stacked, so each computes its own Eq.-2 term against the
+    logits tensor that actually crossed the client boundary.
+    """
+    rec = jax.lax.stop_gradient(received_logits.astype(jnp.float32))
+    lp_live = jax.nn.log_softmax(
+        live_logits.astype(jnp.float32) / temperature, axis=-1)
+    p_live = jnp.exp(lp_live)
+    lp_rec = jax.nn.log_softmax(rec / temperature, axis=-1)  # (J,B,V)
+    self_term = jnp.sum(p_live * lp_live, axis=-1)           # (B,)
+    cross = jnp.einsum("bv,jbv->jb", p_live, lp_rec)         # (J,B)
+    J = received_logits.shape[0]
+    return self_term - jnp.sum(cross, axis=0) / max(J, 1)
 
 
 def mutual_kl_eval(all_logits, temperature: float = 1.0, impl=None):
@@ -170,23 +213,24 @@ def sparse_share_bytes(n_clients: int, n_examples: int, k: int) -> int:
 # ---------------------------------------------------------------------------
 # Bernoulli case (VisionNet sigmoid head — the paper's actual case study)
 
-def bernoulli_mutual_terms(live_probs, fixed_probs):
+def bernoulli_mutual_terms(live_probs, fixed_probs, part_mask=None):
     """Eq. 2 with the j-side fixed, Bernoulli case: (K,B) x (K,B) -> (K,B).
 
     out[i, b] = 1/(K-1) sum_{j != i} KL(Bern(live_i) || Bern(fixed_j)).
     Callers wanting the federated gradient semantics stop_gradient the
     fixed side (received predictions are data, not parameters).
+    ``part_mask`` (K,) 0/1 drops non-participants from both sides of the
+    average (partial participation: M <= K clients per round).
     """
     K = live_probs.shape[0]
     pi = jnp.clip(live_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)[:, None, :]
     pj = jnp.clip(fixed_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)[None, :, :]
     kl = pi * jnp.log(pi / pj) + (1 - pi) * jnp.log((1 - pi) / (1 - pj))
-    mask = (1.0 - jnp.eye(K))[:, :, None]
-    return jnp.sum(kl * mask, axis=1) / max(K - 1, 1)        # (K,B)
+    return jnp.sum(kl * _pair_mask(K, part_mask)[:, :, None], axis=1)  # (K,B)
 
 
 def bernoulli_mutual_loss(all_probs, stop_grad_others: bool = True,
-                          fixed_probs=None):
+                          fixed_probs=None, part_mask=None):
     """all_probs: (K, B) sigmoid outputs -> (K,) per-client Eq.-2 means.
 
     ``fixed_probs`` optionally supplies the received (j-side) predictions —
@@ -196,7 +240,8 @@ def bernoulli_mutual_loss(all_probs, stop_grad_others: bool = True,
     fixed = all_probs if fixed_probs is None else fixed_probs
     if stop_grad_others:
         fixed = jax.lax.stop_gradient(fixed)
-    return jnp.mean(bernoulli_mutual_terms(all_probs, fixed), axis=-1)
+    return jnp.mean(bernoulli_mutual_terms(all_probs, fixed,
+                                           part_mask=part_mask), axis=-1)
 
 
 def bernoulli_mutual_eval(all_probs):

@@ -53,6 +53,19 @@ def client_slice(stacked: Params, c: int) -> Params:
     return jax.tree.map(lambda p: p[c], stacked)
 
 
+def client_lerp(old_stacked: Params, new_stacked: Params, mask) -> Params:
+    """Per-client select on stacked pytrees: client c takes ``new`` where
+    mask[c] == 1, keeps ``old`` where 0 (partial-participation broadcast)."""
+    m = jnp.asarray(mask, jnp.float32)
+
+    def sel(a, b):
+        w = m.reshape((-1,) + (1,) * (a.ndim - 1))
+        return (a.astype(jnp.float32) * (1 - w)
+                + b.astype(jnp.float32) * w).astype(a.dtype)
+
+    return jax.tree.map(sel, old_stacked, new_stacked)
+
+
 def stack_params(params_list: Sequence[Params]) -> Params:
     """List of per-client pytrees -> stacked pytree (K on axis 0)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *params_list)

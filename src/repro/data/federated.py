@@ -8,6 +8,23 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 
+def sample_participants(n_clients: int, participation: int, seed: int,
+                        round_idx: int) -> List[int]:
+    """The M <= K clients sampled for one round (partial participation).
+
+    Stateless in ``round_idx`` — a resumed run samples exactly the same
+    subsets as an uninterrupted one.  ``participation`` <= 0 or >= K means
+    everyone.  Shared by both round engines so the same (seed, round)
+    always names the same subset across engines.
+    """
+    M = participation or n_clients
+    M = min(M, n_clients)
+    if M >= n_clients:
+        return list(range(n_clients))
+    rng = np.random.default_rng(seed * 9973 + 17 + round_idx)
+    return sorted(rng.choice(n_clients, size=M, replace=False).tolist())
+
+
 def round_batch_indices(folds: Sequence[np.ndarray], local_epochs: int,
                         batch_size: int, seed: int = 0
                         ) -> Tuple[np.ndarray, np.ndarray]:
@@ -101,6 +118,14 @@ class FoldScheduler(_RoundPlanMixin):
     def remaining(self) -> int:
         return self.n_folds - self._cursor
 
+    # fold CONTENTS are deterministic in (labels, K, rounds, seed), so a
+    # checkpoint only needs the cursor to resume the rotation exactly
+    def state(self) -> dict:
+        return {"cursor": self._cursor}
+
+    def load_state(self, st: dict) -> None:
+        self._cursor = int(st["cursor"])
+
 
 class NonIIDScheduler(_RoundPlanMixin):
     """Fold discipline with Dirichlet(alpha) class skew per client
@@ -156,6 +181,15 @@ class NonIIDScheduler(_RoundPlanMixin):
         used = 1 if self._init_done else 0
         used += self._round * (self.n_clients + 1) + self._pos
         return self.n_folds - used
+
+    def state(self) -> dict:
+        return {"round": self._round, "pos": self._pos,
+                "init_done": self._init_done}
+
+    def load_state(self, st: dict) -> None:
+        self._round = int(st["round"])
+        self._pos = int(st["pos"])
+        self._init_done = bool(st["init_done"])
 
 
 def dirichlet_shards(labels: np.ndarray, n_clients: int, alpha: float,

@@ -1,13 +1,16 @@
 """CPU-runnable training driver (reduced configs) — the end-to-end path.
 
-Single-model pretraining or federated DML across K clients on synthetic
-bigram streams.  The same step builders are what the dry-run lowers for the
+Single-model pretraining, federated DML across K same-arch clients, or
+heterogeneous-client DML (one arch PER client) on synthetic bigram
+streams.  The same step builders are what the dry-run lowers for the
 production mesh, so this driver doubles as the integration test of the
 whole stack.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
       --method dml --clients 3 --steps 12
+  PYTHONPATH=src python -m repro.launch.train --method hetero \
+      --archs qwen3-4b,mamba2-780m,dbrx-132b --rounds 3 --participation 2
 """
 from __future__ import annotations
 
@@ -27,10 +30,48 @@ from repro.models import transformer as tfm
 from repro.optim import AdamWConfig, adamw_init
 
 
+def _run_hetero(args) -> int:
+    """Heterogeneous-client federated mutual learning (core.hetero)."""
+    from repro.core.hetero import HeteroConfig, HeteroTrainer, make_lm_pool
+
+    archs = tuple(a.strip() for a in args.archs.split(",") if a.strip())
+    hc = HeteroConfig(archs=archs, rounds=args.rounds, batch_size=args.batch,
+                      public_batch=max(1, args.batch // 2), lr=args.lr,
+                      kl_weight=args.kl_weight,
+                      participation=args.participation, seed=args.seed)
+    vocab = get_reduced(archs[0]).vocab_size
+    n_folds = (1 + len(archs)) * args.rounds + 1
+    pool, labels = make_lm_pool(n_folds * max(2 * args.batch, 8),
+                                args.seq, vocab, seed=args.seed)
+    t0 = time.time()
+    tr = HeteroTrainer(hc, pool, labels)
+    print("federating:", ", ".join(
+        f"{a} ({tr._models[a].family})" for a in archs))
+    if args.resume:
+        tr.restore_state(args.resume)
+        print(f"resumed from {args.resume} at round {tr._round}")
+    h = tr.run(until=args.until)
+    for rl in h.rounds:
+        print(f"round {rl.round:3d} participants={rl.participants} "
+              f"local={['%.3f' % x for x in rl.client_loss]} "
+              f"kld={['%.4f' % x for x in rl.kl_loss]} "
+              f"comm_bytes={rl.comm_bytes}", flush=True)
+    tr.evaluate()
+    print(f"held-out eval loss per client: "
+          f"{['%.3f' % x for x in h.client_eval_loss]}")
+    print(f"total_comm_bytes={h.total_comm_bytes}")
+    print(f"done in {time.time() - t0:.1f}s")
+    if args.save:
+        tr.save_state(args.save)
+        print(f"saved federated state to {args.save}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
-    ap.add_argument("--method", choices=["single", "dml"], default="single")
+    ap.add_argument("--method", choices=["single", "dml", "hetero"],
+                    default="single")
     ap.add_argument("--clients", type=int, default=2)
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
@@ -39,7 +80,24 @@ def main(argv=None) -> int:
     ap.add_argument("--kl-weight", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None, help="checkpoint path")
+    # hetero-only knobs: one arch PER client; round-based schedule
+    ap.add_argument("--archs", default="qwen3-4b,mamba2-780m,dbrx-132b",
+                    help="comma-separated arch id per client (hetero)")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="federated rounds (hetero)")
+    ap.add_argument("--until", type=int, default=0,
+                    help="stop after this round (0 = run all --rounds); "
+                         "with --save this checkpoints mid-schedule so a "
+                         "later --resume run (SAME --rounds) continues "
+                         "bitwise-identically (hetero)")
+    ap.add_argument("--participation", type=int, default=0,
+                    help="clients sampled per round, 0 = all (hetero)")
+    ap.add_argument("--resume", default=None,
+                    help="restore a --save checkpoint and continue (hetero)")
     args = ap.parse_args(argv)
+
+    if args.method == "hetero":
+        return _run_hetero(args)
 
     cfg = get_reduced(args.arch)
     opt_cfg = AdamWConfig(lr=args.lr, warmup=5, total_steps=args.steps)

@@ -1,2 +1,115 @@
-"""Model zoo: shared decoder backbone + the paper's VisionNet CNN."""
+"""Model zoo + the per-client model registry for heterogeneous federation.
+
+The zoo itself is the shared decoder backbone (``models.transformer``
+assembling attention / Mamba / MoE slots) plus the paper's VisionNet CNN.
+``get_client_model`` wraps any of them behind one small interface so the
+heterogeneous engine (``core.hetero``) can federate clients whose pytrees
+do not even match: every client exposes init / private-loss /
+public-CE-and-logits / share-logits, and only the shared (N_pub, V) logits
+ever cross a client boundary.
+
+Two modalities ("kind"):
+  - 'lm':     token streams; V = vocab_size.  Families dense / ssm / moe /
+              hybrid, resolved through the config registry by arch id.
+  - 'vision': the paper's VisionNet; the Bernoulli head is lifted to
+              2-class logits [log(1-p), log p] so the categorical Eq.-2
+              machinery applies unchanged (softmax == [1-p, p], and the
+              categorical KL equals the Bernoulli KL exactly).
+
+A single federation must share one kind and one prediction space V — that
+is the whole point of prediction sharing: it composes across model
+families, but only over a common public set.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
 from repro.models import transformer, visionnet  # noqa: F401
+
+
+class ClientModel(NamedTuple):
+    """One federated client's model, behind the modality-uniform interface.
+
+    All callables take gathered arrays (inputs, labels) so the engine can
+    drive any family identically; ``labels`` is ignored by 'lm' clients
+    (next-token targets come from the stream itself).
+    """
+    arch: str                     # registry id ('qwen3-4b', 'visionnet', ...)
+    family: str                   # dense | ssm | moe | hybrid | vision
+    kind: str                     # 'lm' | 'vision'
+    cfg: Any
+    init: Callable                # key -> params
+    private_loss: Callable        # (params, inputs, labels, key) -> scalar
+    public_ce_and_logits: Callable  # (params, inputs, labels, key)
+    #                                   -> (ce, logits (N_pub, V))
+    share_logits: Callable        # (params, inputs) -> (N_pub, V), eval mode
+    n_classes: int                # V of the shared prediction space
+
+
+def _lm_client(arch: str, cfg) -> ClientModel:
+    V = cfg.vocab_size
+
+    def private_loss(params, tokens, labels, key):
+        del labels, key                      # targets are the shifted stream
+        loss, _ = transformer.loss_fn(params, cfg, tokens)
+        return loss
+
+    def public_ce_and_logits(params, tokens, labels, key):
+        del labels, key
+        logits, _ = transformer.forward(params, cfg, tokens)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        ce = -jnp.mean(jnp.take_along_axis(logp, tokens[:, 1:, None], -1))
+        return ce, logits.reshape(-1, V)
+
+    def share_logits(params, tokens):
+        logits, _ = transformer.forward(params, cfg, tokens)
+        return logits.reshape(-1, V)
+
+    return ClientModel(arch, cfg.family, "lm", cfg,
+                       lambda key: transformer.init_model(key, cfg),
+                       private_loss, public_ce_and_logits, share_logits, V)
+
+
+def _bern_to_logits(p):
+    """(B,) sigmoid prob -> (B, 2) logits with softmax exactly [1-p, p]."""
+    p = jnp.clip(p.astype(jnp.float32), 1e-6, 1 - 1e-6)
+    return jnp.stack([jnp.log1p(-p), jnp.log(p)], axis=-1)
+
+
+def _vision_client(arch: str, cfg) -> ClientModel:
+    def private_loss(params, images, labels, key):
+        probs = visionnet.visionnet_forward(params, cfg, images, train=True,
+                                            dropout_key=key)
+        return visionnet.bce_loss(probs, labels)
+
+    def public_ce_and_logits(params, images, labels, key):
+        probs = visionnet.visionnet_forward(params, cfg, images, train=True,
+                                            dropout_key=key)
+        return visionnet.bce_loss(probs, labels), _bern_to_logits(probs)
+
+    def share_logits(params, images):
+        return _bern_to_logits(
+            visionnet.visionnet_forward(params, cfg, images, train=False))
+
+    return ClientModel(arch, "vision", "vision", cfg,
+                       lambda key: visionnet.init_visionnet(key, cfg),
+                       private_loss, public_ce_and_logits, share_logits, 2)
+
+
+def get_client_model(arch: str, reduced: bool = True) -> ClientModel:
+    """Resolve an arch id to its family-specific client interface."""
+    if arch == "visionnet":
+        from repro.configs import visionnet as vn_cfg
+        return _vision_client(arch, vn_cfg.reduced() if reduced
+                              else vn_cfg.CONFIG)
+    from repro.configs import get_config, get_reduced
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    if cfg.prefix_tokens:
+        raise ValueError(
+            f"{arch}: modality-frontend archs (prefix_tokens > 0) are not "
+            "supported as heterogeneous clients — the public set is a plain "
+            "token stream")
+    return _lm_client(arch, cfg)

@@ -29,6 +29,31 @@ def test_roundtrip_nested(tmp_path):
     assert isinstance(restored["nested"]["c"], list)
 
 
+def test_roundtrip_client_stacked_federated_state(tmp_path):
+    """Client-stacked pytrees (leading K axis on every leaf) + SGD state +
+    PRNG key round-trip bitwise — the payload of FederatedTrainer.save_state."""
+    from repro.core import stacking
+    cfg = get_reduced("qwen3-4b")
+    base = tfm.init_model(jax.random.PRNGKey(3), cfg)
+    stacked = stacking.broadcast_stack(base, 3)
+    opts = stacking.stacked_sgd_init(stacked)
+    state = {"client_params": stacked, "client_opts": opts,
+             "key": jax.random.PRNGKey(9)}
+    path = str(tmp_path / "fed")
+    checkpoint.save(path, state, {"round": 2, "scheduler": {"cursor": 5}})
+    restored, meta = checkpoint.restore(path)
+    assert meta["round"] == 2 and meta["scheduler"]["cursor"] == 5
+    want, tw = jax.tree_util.tree_flatten(state)
+    got, tg = jax.tree_util.tree_flatten(restored)
+    assert tw == tg
+    for x, y in zip(want, got):
+        assert np.asarray(x).dtype == y.dtype and np.asarray(x).shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x), y)
+    # every client leaf keeps its leading K axis
+    assert all(l.shape[0] == 3 for l in
+               jax.tree.leaves(restored["client_params"]))
+
+
 def test_roundtrip_model_and_opt_state(tmp_path):
     cfg = get_reduced("qwen2-moe-a2.7b")
     params = tfm.init_model(jax.random.PRNGKey(0), cfg)

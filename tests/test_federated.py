@@ -246,6 +246,105 @@ def test_comm_accounting_scales_with_mutual_epochs():
     assert comm[3] == 3 * comm[1] > 0
 
 
+def test_partial_participation_masks_and_scales_comm():
+    """M < K: absentees' params/opt are bitwise-untouched, they are excluded
+    from the Eq.-2 average, and comm_bytes scale with M (all 3 methods)."""
+    vn = reduced()
+    (tr_x, tr_y), _ = make_paper_datasets(image_size=vn.image_size,
+                                          n_train=300, n_test=40)
+    for method in ("dml", "fedavg", "async"):
+        comm = {}
+        for m in (0, 2):
+            fc = FederatedConfig(method=method, n_clients=4, rounds=1,
+                                 local_epochs=1, batch_size=16,
+                                 participation=m, min_round=0, delta=1,
+                                 seed=3)
+            t = FederatedTrainer(vn, fc, tr_x, tr_y)
+            before = jax.tree.map(lambda x: np.asarray(x).copy(),
+                                  t.client_params)
+            h = t.run()
+            comm[m] = h.total_comm_bytes
+            if m == 2:
+                part = h.rounds[0].participants
+                assert len(part) == 2
+                for c in (c for c in range(4) if c not in part):
+                    for x, y in zip(jax.tree.leaves(before),
+                                    jax.tree.leaves(t.client_params)):
+                        np.testing.assert_array_equal(x[c], np.asarray(y)[c])
+        assert comm[0] > 0
+        assert comm[2] * 4 == comm[0] * 2, (method, comm)
+
+
+def test_participation_full_equals_disabled():
+    """participation=K must be the identity knob: bitwise-equal to the
+    default full-participation run (and RoundLog.participants stays None)."""
+    vn = reduced()
+    (tr_x, tr_y), _ = make_paper_datasets(image_size=vn.image_size,
+                                          n_train=240, n_test=40)
+    outs = []
+    for m in (0, 2):
+        fc = FederatedConfig(method="dml", n_clients=2, rounds=1,
+                             local_epochs=1, batch_size=16,
+                             participation=m, seed=1)
+        t = FederatedTrainer(vn, fc, tr_x, tr_y)
+        h = t.run()
+        assert h.rounds[0].participants is None
+        outs.append(t.client_params)
+    for x, y in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("method", ["dml", "async"])
+def test_resume_bitwise_matches_uninterrupted(method, tmp_path):
+    """Acceptance (checkpoint satellite): save at the round boundary,
+    restore into a fresh trainer, continue — params, opt state, comm
+    accounting and history all bitwise-match the uninterrupted run."""
+    vn = reduced()
+    (tr_x, tr_y), _ = make_paper_datasets(image_size=vn.image_size,
+                                          n_train=300, n_test=40)
+    fc = FederatedConfig(method=method, n_clients=2, rounds=2,
+                         local_epochs=1, batch_size=16, min_round=0,
+                         delta=2, seed=5)
+    a = FederatedTrainer(vn, fc, tr_x, tr_y)
+    a.run()
+    b = FederatedTrainer(vn, fc, tr_x, tr_y)
+    b.run(until=1)
+    path = str(tmp_path / "fed_state")
+    b.save_state(path)
+    c = FederatedTrainer(vn, fc, tr_x, tr_y)
+    c.restore_state(path)
+    assert c.folds.remaining() == b.folds.remaining()
+    c.run()
+    for x, y in zip(jax.tree.leaves(a.client_params),
+                    jax.tree.leaves(c.client_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(a.client_opts),
+                    jax.tree.leaves(c.client_opts)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(a.global_params),
+                    jax.tree.leaves(c.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert c.history.total_comm_bytes == a.history.total_comm_bytes
+    assert [r.comm_bytes for r in c.history.rounds] == \
+        [r.comm_bytes for r in a.history.rounds]
+
+
+def test_restore_rejects_config_mismatch(tmp_path):
+    vn = reduced()
+    (tr_x, tr_y), _ = make_paper_datasets(image_size=vn.image_size,
+                                          n_train=240, n_test=40)
+    fc = FederatedConfig(method="dml", n_clients=2, rounds=1,
+                         local_epochs=1, batch_size=16)
+    t = FederatedTrainer(vn, fc, tr_x, tr_y)
+    path = str(tmp_path / "st")
+    t.save_state(path)
+    other = FederatedTrainer(vn, FederatedConfig(
+        method="fedavg", n_clients=2, rounds=1, local_epochs=1,
+        batch_size=16), tr_x, tr_y)
+    with pytest.raises(ValueError, match="checkpoint"):
+        other.restore_state(path)
+
+
 def test_dml_comm_orders_of_magnitude_smaller():
     """The paper's bandwidth claim on identical setups."""
     vn = reduced()

@@ -1,0 +1,172 @@
+"""Heterogeneous-client DML engine: the per-client model registry, mixed
+model-family rounds, partial-participation comm scaling, and bitwise
+checkpoint/resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hetero import (HeteroConfig, HeteroTrainer,
+                               comm_bytes_per_round, make_lm_pool)
+from repro.core.mutual import kl_to_received, mutual_kl_terms
+from repro.models import get_client_model
+
+ARCHS3 = ("qwen3-4b", "mamba2-780m", "dbrx-132b")       # dense / ssm / moe
+
+
+def _tiny_cfg(**kw):
+    base = dict(archs=("qwen3-4b", "mamba2-780m"), rounds=2, local_epochs=1,
+                batch_size=2, public_batch=2, seed=0)
+    base.update(kw)
+    return HeteroConfig(**base)
+
+
+def _pool(n=160, seq=24):
+    return make_lm_pool(n, seq, 512, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+def test_registry_resolves_families():
+    fams = {a: get_client_model(a).family for a in ARCHS3}
+    assert fams == {"qwen3-4b": "dense", "mamba2-780m": "ssm",
+                    "dbrx-132b": "moe"}
+    assert all(get_client_model(a).kind == "lm" for a in ARCHS3)
+    vn = get_client_model("visionnet")
+    assert vn.kind == "vision" and vn.n_classes == 2
+
+
+def test_registry_vision_logits_match_bernoulli():
+    """The 2-class lift: softmax(share_logits) must equal [1-p, p]."""
+    from repro.configs.visionnet import reduced
+    from repro.models.visionnet import visionnet_forward
+    cm = get_client_model("visionnet")
+    params = cm.init(jax.random.PRNGKey(0))
+    imgs = jnp.asarray(np.random.default_rng(0).uniform(
+        0, 1, (3, reduced().image_size, reduced().image_size, 3)
+    ).astype(np.float32))
+    p = np.asarray(visionnet_forward(params, cm.cfg, imgs, train=False))
+    soft = np.asarray(jax.nn.softmax(cm.share_logits(params, imgs), axis=-1))
+    np.testing.assert_allclose(soft[:, 1], p, atol=1e-5)
+    np.testing.assert_allclose(soft[:, 0], 1 - p, atol=1e-5)
+
+
+def test_registry_rejects_prefix_archs():
+    with pytest.raises(ValueError, match="prefix"):
+        get_client_model("llava-next-mistral-7b")
+
+
+def test_mixed_modality_federation_rejected():
+    data, labels = _pool(60)
+    with pytest.raises(ValueError, match="modalit"):
+        HeteroTrainer(_tiny_cfg(archs=("qwen3-4b", "visionnet")), data,
+                      labels)
+
+
+def test_kl_to_received_matches_pairwise_eq2():
+    """Per-client Eq. 2 vs received logits == row i of the stacked form."""
+    rng = np.random.default_rng(1)
+    stack = jnp.asarray(rng.normal(0, 1, (4, 5, 16)).astype(np.float32))
+    full = np.asarray(mutual_kl_terms(stack, stack))          # (K, B)
+    for i in range(4):
+        others = jnp.asarray(np.delete(np.asarray(stack), i, axis=0))
+        mine = np.asarray(kl_to_received(stack[i], others))   # (B,)
+        np.testing.assert_allclose(mine, full[i], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine
+
+def test_engine_round_mixed_families():
+    """Transformer + SSM + MoE federate through prediction sharing only."""
+    data, labels = _pool()
+    cfg = _tiny_cfg(archs=ARCHS3, rounds=1)
+    tr = HeteroTrainer(cfg, data, labels)
+    # the three client pytrees genuinely differ — averaging is undefined
+    structs = {str(jax.tree.structure(p)) for p in tr.client_params}
+    assert len(structs) == 3
+    h = tr.run()
+    tr.evaluate()
+    assert len(h.rounds) == 1
+    rl = h.rounds[0]
+    assert rl.participants == [0, 1, 2]
+    assert all(np.isfinite(x) for x in rl.client_loss)
+    assert all(np.isfinite(x) for x in rl.kl_loss) and max(rl.kl_loss) > 0
+    assert rl.comm_bytes > 0 and h.total_comm_bytes == rl.comm_bytes
+    assert len(h.client_eval_loss) == 3
+    assert all(np.isfinite(x) for x in h.client_eval_loss)
+
+
+def test_partial_participation_comm_scales_with_m():
+    """Acceptance: an M < K run reports comm_bytes scaling with M, and the
+    absent client is bitwise-untouched that round."""
+    data, labels = _pool()
+    comm = {}
+    for m in (0, 2):
+        cfg = _tiny_cfg(archs=ARCHS3, rounds=1, participation=m, seed=4)
+        tr = HeteroTrainer(cfg, data, labels)
+        before = [jax.tree.map(lambda x: np.asarray(x).copy(), p)
+                  for p in tr.client_params]
+        h = tr.run()
+        comm[m] = h.total_comm_bytes
+        part = h.rounds[0].participants
+        if m == 2:
+            assert len(part) == 2
+            (absent,) = [c for c in range(3) if c not in part]
+            for x, y in zip(jax.tree.leaves(before[absent]),
+                            jax.tree.leaves(tr.client_params[absent])):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+            assert h.rounds[0].client_loss[absent] == 0.0
+    # comm = E * 2 * M * N_pub * V * 4 -> exactly M/K of the full run
+    assert comm[2] * 3 == comm[0] * 2 > 0
+    d = comm_bytes_per_round(2, 2 * 24, 512, 1)
+    assert comm[2] == d["round"] == d["per_epoch_up"] + d["per_epoch_down"]
+
+
+def test_checkpoint_resume_bitwise_parity(tmp_path):
+    """A save/restore at the round boundary continues bitwise-identically
+    to the uninterrupted run (params, opt, comm accounting, fold cursor)."""
+    data, labels = _pool()
+    cfg = _tiny_cfg(rounds=2, seed=7)
+    a = HeteroTrainer(cfg, data, labels)
+    a.run()
+    b = HeteroTrainer(cfg, data, labels)
+    b.run(until=1)
+    path = str(tmp_path / "hetero_state")
+    b.save_state(path)
+    c = HeteroTrainer(cfg, data, labels)
+    c.restore_state(path)
+    assert c._round == 1 and c.folds.remaining() == b.folds.remaining()
+    c.run()
+    for pa, pc in zip(jax.tree.leaves(a.client_params),
+                      jax.tree.leaves(c.client_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pc))
+    for oa, oc in zip(jax.tree.leaves(a.client_opts),
+                      jax.tree.leaves(c.client_opts)):
+        np.testing.assert_array_equal(np.asarray(oa), np.asarray(oc))
+    assert c.history.total_comm_bytes == a.history.total_comm_bytes
+    assert len(c.history.rounds) == len(a.history.rounds) == 2
+
+
+def test_archs_mismatch_rejected(tmp_path):
+    data, labels = _pool(60)
+    cfg = _tiny_cfg(rounds=1)
+    tr = HeteroTrainer(cfg, data, labels)
+    path = str(tmp_path / "st")
+    tr.save_state(path)
+    other = HeteroTrainer(_tiny_cfg(archs=("qwen3-4b", "qwen3-4b"),
+                                    rounds=1), data, labels)
+    with pytest.raises(ValueError, match="archs"):
+        other.restore_state(path)
+
+
+def test_trainer_requires_checkpoint_dir_roundtrip(tmp_path):
+    """save_state writes through repro.checkpoint: npz + JSON sidecar."""
+    data, labels = _pool(60)
+    tr = HeteroTrainer(_tiny_cfg(rounds=1), data, labels)
+    path = str(tmp_path / "ck")
+    tr.save_state(path)
+    assert os.path.exists(path + ".npz") and os.path.exists(path + ".json")
