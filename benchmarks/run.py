@@ -5,19 +5,32 @@
   bench_comm     communication bytes/round (the bandwidth claim), CNN + LLM
   bench_hetero   heterogeneous-client DML (transformer+SSM+MoE) incl.
                  partial participation comm scaling
+  bench_sharded  device-sharded DML rounds: wall-clock + dispatches vs
+                 device count (fake CPU host devices), bitwise-checked
   bench_kernels  kernel wrappers: us_per_call + derived FLOP counts
 
 Output: CSV-ish lines on stdout (``name,col,col,...``) AND a
 machine-readable ``BENCH_<table>.json`` per bench next to them (--out-dir,
 default cwd) — the perf-trajectory input for future PRs.
 Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+     PYTHONPATH=src python -m benchmarks.run --table sharded
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
+
+# the sharded table needs several XLA host devices, and the flag must be
+# set BEFORE jax initialises — hence this pre-import peek at argv (both
+# "--table sharded" and "--table=sharded" forms)
+if any("sharded" in a for a in sys.argv) and "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = " ".join(x for x in (
+        os.environ.get("XLA_FLAGS", ""),
+        "--xla_force_host_platform_device_count="
+        + os.environ.get("BENCH_HOST_DEVICES", "8")) if x)
 
 import jax
 import jax.numpy as jnp
@@ -207,6 +220,64 @@ def bench_hetero() -> None:
                 total_comm_bytes=h.total_comm_bytes)
 
 
+def bench_sharded() -> None:
+    """Device-sharded federated rounds (core.federated + shard_map over a
+    ``clients`` mesh): steady-state round wall-clock and jitted dispatches
+    per round vs device count, on fake CPU host devices.  device_count=1
+    is the unsharded engine baseline; every sharded run's final state is
+    checked bitwise against it (the engine's parity guarantee)."""
+    from repro.core.federated import FederatedConfig, FederatedTrainer
+    from repro.launch.mesh import make_client_mesh
+    from repro.configs.visionnet import reduced as vn_reduced
+    print("\n# sharded: device_count,clients,compile_round_s,"
+          "steady_round_s,dispatches_per_round,comm_bytes_per_round,"
+          "bitwise_vs_unsharded")
+    n_avail = len(jax.devices())
+    if n_avail < 2:
+        print("# sharded: skipped — 1 visible device (run via "
+              "`--table sharded`, which sets "
+              "--xla_force_host_platform_device_count before jax init)")
+        return
+    K = 8
+    rounds = 2 if FAST else 4
+    n_tr = 600 if FAST else 1600
+    vn = vn_reduced()
+    (tr_x, tr_y), _ = make_paper_datasets(image_size=vn.image_size,
+                                          n_train=n_tr, n_test=40)
+    baseline = None
+    for n_dev in (1, 2, 4, 8):
+        if n_dev > n_avail:
+            print(f"# sharded: skipping device_count={n_dev} "
+                  f"(only {n_avail} devices; run with XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=8)")
+            continue
+        mesh = None if n_dev == 1 else make_client_mesh(n_dev)
+        fc = FederatedConfig(method="dml", n_clients=K, rounds=rounds,
+                             local_epochs=1, batch_size=16, seed=0)
+        tr = FederatedTrainer(vn, fc, tr_x, tr_y, mesh=mesh)
+        t0 = time.perf_counter()
+        tr.run(until=1)                     # compile + round 0
+        t_compile = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tr.run()                            # steady-state rounds
+        steady = (time.perf_counter() - t0) / max(rounds - 1, 1)
+        disp = len([1 for r, _ in tr.dispatch_log if r == rounds - 1])
+        comm = tr.history.rounds[-1].comm_bytes
+        if mesh is None:
+            baseline = tr
+            bitwise = "ref"
+        else:
+            bitwise = all(
+                np.array_equal(np.asarray(x), np.asarray(y))
+                for x, y in zip(jax.tree.leaves(baseline.client_params),
+                                jax.tree.leaves(tr.client_params)))
+            assert bitwise, f"sharded n_dev={n_dev} diverged from unsharded"
+        row("sharded", device_count=n_dev, clients=K,
+            compile_round_s=round(t_compile, 2),
+            steady_round_s=round(steady, 3), dispatches_per_round=disp,
+            comm_bytes_per_round=comm, bitwise_vs_unsharded=bitwise)
+
+
 def _time_call(fn, *args, reps=3):
     jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
@@ -259,6 +330,7 @@ BENCHES = {
     "hard_task": bench_hard_task,
     "noniid": bench_noniid,
     "hetero": bench_hetero,
+    "sharded": bench_sharded,
     "kernels": bench_kernels,
 }
 
@@ -269,6 +341,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", choices=sorted(BENCHES), default=None,
                     help="run a single bench section")
+    ap.add_argument("--table", dest="only", choices=sorted(BENCHES),
+                    help="alias for --only")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<table>.json files")
     args, _ = ap.parse_known_args()

@@ -19,8 +19,17 @@ Python-dispatched calls:
   _local_scan     vmap over clients of lax.scan over the fixed-shape
                   (K, T, B) batch plan from ``data.federated``
   _mutual_scan    all mutual epochs fused: dropout-free share + Eq.-1
-                  descent for all K clients (``mutual.bernoulli_mutual_loss``)
+                  descent for all K clients (``mutual.bernoulli_mutual_terms_vs``)
   _predict_stacked  vmapped inference — sharing, scores, and eval
+
+With a ``clients`` mesh (``FederatedTrainer(..., mesh=...)``) the same two
+training programs run inside ``sharding.shard_map`` over the client axis:
+each device owns whole clients (round-robin spill for K > n_devices via
+``stacking.client_layout``), local training is collective-free, and the
+mutual phase's ONLY cross-device traffic is one all-gather of the public-
+fold predictions per mutual epoch — exactly the bytes
+``comm_bytes_per_round`` simulates.  Results are bitwise-identical to the
+unsharded engine (tests/test_multidevice.py holds this for all 3 methods).
 
 Communication bytes are accounted per round for the bandwidth claim.
 """
@@ -34,11 +43,12 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro import checkpoint
+from repro import checkpoint, sharding
 from repro.configs.visionnet import VisionNetConfig
 from repro.core import async_fl, fedavg, stacking
-from repro.core.mutual import bernoulli_mutual_loss
+from repro.core.mutual import _pair_mask, bernoulli_mutual_terms_vs
 from repro.data.federated import (FoldScheduler, NonIIDScheduler,
                                   round_batch_indices, sample_participants)
 from repro.models.visionnet import (bce_loss, init_visionnet,
@@ -101,15 +111,17 @@ def _masked_lerp(old, new, w):
     return jax.tree.map(lambda a, b: w * b + (1 - w) * a, old, new)
 
 
-@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
-                                             "conv_impl"))
-def _local_scan(stacked_params, stacked_opt, images, labels, masks, keys,
-                vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
-                conv_impl: str = "fused"):
-    """Local epochs for all clients: vmap(client) of scan(batch plan).
+def _local_scan_impl(stacked_params, stacked_opt, images, labels, masks,
+                     keys, vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                     conv_impl: str = "fused"):
+    """Body of ``_local_scan`` — also the per-device shard_map body of
+    ``_sharded_local_scan`` (per-client work is embarrassingly parallel, so
+    the sharded engine runs this code unchanged on each device's slice).
 
-    images (K,T,B,H,W,C) · labels (K,T,B) · masks (K,T) · keys (K,T,2).
-    Returns (stacked_params, stacked_opt, mean BCE per client (K,)).
+    K > 1 runs in canonical width-2 client chunks
+    (``stacking.chunked_client_map``) so the per-client arithmetic is
+    bit-identical no matter how many clients this program instance holds;
+    K == 1 (the global model) keeps the plain single-client vmap.
     """
 
     def one_client(params, opt, imgs, labs, w, ks):
@@ -134,8 +146,134 @@ def _local_scan(stacked_params, stacked_opt, images, labels, masks, keys,
                                              (imgs, labs, w, ks))
         return params, opt, jnp.sum(losses) / jnp.maximum(jnp.sum(w), 1.0)
 
-    return jax.vmap(one_client)(stacked_params, stacked_opt, images, labels,
-                                masks, keys)
+    args = (stacked_params, stacked_opt, images, labels, masks, keys)
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    if K == 1:
+        return jax.vmap(one_client)(*args)
+    return stacking.chunked_client_map(
+        lambda a, _c: jax.vmap(one_client)(*a), args, K)
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
+                                             "conv_impl"))
+def _local_scan(stacked_params, stacked_opt, images, labels, masks, keys,
+                vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                conv_impl: str = "fused"):
+    """Local epochs for all clients: vmap(client) of scan(batch plan).
+
+    images (K,T,B,H,W,C) · labels (K,T,B) · masks (K,T) · keys (K,T,2).
+    Returns (stacked_params, stacked_opt, mean BCE per client (K,)).
+    """
+    return _local_scan_impl(stacked_params, stacked_opt, images, labels,
+                            masks, keys, vn_cfg, sgd_cfg, conv_impl)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_local_program(mesh, n_clients: int, vn_cfg: VisionNetConfig,
+                           sgd_cfg: SGDConfig, conv_impl: str):
+    body = functools.partial(_local_scan_impl, vn_cfg=vn_cfg,
+                             sgd_cfg=sgd_cfg, conv_impl=conv_impl)
+    spec = stacking.client_spec()
+    return jax.jit(sharding.shard_map(body, mesh, in_specs=(spec,) * 6,
+                                      out_specs=(spec, spec, spec)))
+
+
+def _sharded_local_scan(stacked_params, stacked_opt, images, labels, masks,
+                        keys, mesh, n_clients: int,
+                        vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                        conv_impl: str = "fused"):
+    """``_local_scan`` inside shard_map over the ``clients`` mesh axis.
+
+    Each device trains only the clients it owns (round-robin layout from
+    ``stacking``; K > n_devices spills extra clients as second/third slots)
+    and the phase runs with ZERO cross-device collectives — private data
+    never leaves its device, matching the paper's locality claim.
+
+    The round-robin reorder/pad runs EAGERLY, outside the jitted shard_map
+    program: an in-jit gather feeding shard_map lets XLA's layout
+    assignment propagate non-standard layouts into the per-device body,
+    whose convs/GEMMs then round differently from the unsharded engine.
+    """
+    n_dev = mesh.shape[stacking.CLIENT_AXIS]
+    shard = lambda t: stacking.shard_clients(t, n_clients, n_dev)
+    run = _sharded_local_program(mesh, n_clients, vn_cfg, sgd_cfg,
+                                 conv_impl)
+    p, o, losses = run(shard(stacked_params), shard(stacked_opt),
+                       shard(images), shard(labels), shard(masks),
+                       shard(keys))
+    unshard = lambda t: stacking.unshard_clients(t, n_clients, n_dev)
+    return unshard(p), unshard(o), unshard(losses)
+
+
+def _isolated_epoch(epoch):
+    """Pin a scan body as its own compilation unit.  XLA inlines
+    trip-count-1 loops (mutual_epochs=1 is the default), and an inlined
+    epoch fuses with its surroundings — which differ between the sharded
+    and unsharded engines — breaking their bitwise parity."""
+    def wrapped(carry, xs):
+        carry, xs = jax.lax.optimization_barrier((carry, xs))
+        return jax.lax.optimization_barrier(epoch(carry, xs))
+    return wrapped
+
+
+def _predict_chunked(stacked_params, images, vn_cfg: VisionNetConfig):
+    """Dropout-free stacked forward in canonical client chunks: (K, B)."""
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    fn = lambda a, c: jax.vmap(
+        lambda q: visionnet_forward(q, vn_cfg, c[0], train=False))(a[0])
+    return stacking.chunked_client_map(fn, (stacked_params,), K,
+                                       const_args=(images,))
+
+
+def _mutual_epoch_step(stacked_params, stacked_opt, keys_e, pm_rows,
+                       pair_rows, shared, pub_images, pub_labels,
+                       vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                       kl_weight: float, conv_impl: str):
+    """One Eq.-1 descent for a stack of clients against FIXED shared
+    predictions.
+
+    ``shared`` (K, B) is the fleet's dropout-free public-fold predictions
+    in natural client order (already stop-gradient'ed: received predictions
+    are data); ``pair_rows`` the matching rows of the Eq.-2 pair mask, and
+    ``pm_rows`` the rows' participation bits.  Runs in canonical width-2
+    chunks, so the unsharded engine (full K rows) and each device of the
+    sharded engine (its K_loc rows) execute bit-identical per-client
+    arithmetic.  Returns (params, opt, (bce, kld)).
+    """
+
+    def chunk(args, const):
+        c_params, c_opt, c_keys, c_pm, c_w = args
+        c_shared, c_imgs, c_labs = const
+
+        def total_loss(cp):
+            live = jax.vmap(
+                lambda q, k: visionnet_forward(q, vn_cfg, c_imgs,
+                                               train=True, dropout_key=k,
+                                               conv_impl=conv_impl)
+            )(cp, c_keys)                                       # (2,B)
+            bce = jax.vmap(lambda pr: bce_loss(pr, c_labs))(live)
+            kld = jnp.mean(bernoulli_mutual_terms_vs(live, c_shared, c_w),
+                           axis=-1)                             # (2,)
+            return (jnp.sum(bce * c_pm) + kl_weight * jnp.sum(kld),
+                    (bce, kld))
+
+        (_, (bce, kld)), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(c_params)
+        # per-client update so grad clipping stays per client, exactly as
+        # in the per-client loop this replaces
+        new_p, new_o, _ = jax.vmap(
+            lambda q, g, o: sgd_update(q, g, o, sgd_cfg))(c_params, grads,
+                                                          c_opt)
+        p = jax.vmap(_masked_lerp)(c_params, new_p, c_pm)
+        o = {"vel": jax.vmap(_masked_lerp)(c_opt["vel"], new_o["vel"],
+                                           c_pm),
+             "step": c_opt["step"] + c_pm.astype(jnp.int32)}
+        return p, o, (bce, kld)
+
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    return stacking.chunked_client_map(
+        chunk, (stacked_params, stacked_opt, keys_e, pm_rows, pair_rows), K,
+        const_args=(shared, pub_images, pub_labels))
 
 
 @functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
@@ -148,45 +286,94 @@ def _mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels, keys,
     keys (E, K, 2) · part_mask (K,) 0/1.  Per epoch: every participant
     shares its dropout-free predictions on the public fold (what actually
     goes over the wire), then descends Eq. 1 — BCE + kl_weight · KLD vs the
-    received tensor held fixed (``bernoulli_mutual_loss``).  Partial
-    participation masks absentees out of the Eq.-2 average AND out of the
-    update (their params/opt ride through unchanged).  Returns the final
-    epoch's per-client (total loss, bce, kld), each (K,).
+    received tensor held fixed.  Partial participation masks absentees out
+    of the Eq.-2 average AND out of the update (their params/opt ride
+    through unchanged).  Returns the final epoch's per-client
+    (total loss, bce, kld), each (K,).
     """
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    pair_w = _pair_mask(K, part_mask)
 
     def epoch(carry, ks):
         params, opt = carry
-        shared = jax.vmap(
-            lambda q: visionnet_forward(q, vn_cfg, pub_images,
-                                        train=False))(params)       # (K,B)
-
-        def total_loss(sp):
-            live = jax.vmap(
-                lambda q, k: visionnet_forward(q, vn_cfg, pub_images,
-                                               train=True, dropout_key=k,
-                                               conv_impl=conv_impl)
-            )(sp, ks)                                               # (K,B)
-            bce = jax.vmap(lambda pr: bce_loss(pr, pub_labels))(live)
-            kld = bernoulli_mutual_loss(live, fixed_probs=shared,
-                                        part_mask=part_mask)        # (K,)
-            return (jnp.sum(bce * part_mask) + kl_weight * jnp.sum(kld),
-                    (bce, kld))
-
-        (_, (bce, kld)), grads = jax.value_and_grad(
-            total_loss, has_aux=True)(params)
-        # per-client update so grad clipping stays per client, exactly as
-        # in the per-client loop this replaces
-        new_p, new_o, _ = jax.vmap(
-            lambda q, g, o: sgd_update(q, g, o, sgd_cfg))(params, grads, opt)
-        params = jax.vmap(_masked_lerp)(params, new_p, part_mask)
-        opt = {"vel": jax.vmap(_masked_lerp)(opt["vel"], new_o["vel"],
-                                             part_mask),
-               "step": opt["step"] + part_mask.astype(jnp.int32)}
+        shared = jax.lax.stop_gradient(
+            _predict_chunked(params, pub_images, vn_cfg))          # (K,B)
+        params, opt, (bce, kld) = _mutual_epoch_step(
+            params, opt, ks, part_mask, pair_w, shared, pub_images,
+            pub_labels, vn_cfg, sgd_cfg, kl_weight, conv_impl)
         return (params, opt), (bce + kl_weight * kld, bce, kld)
 
     (stacked_params, stacked_opt), (loss, bce, kld) = jax.lax.scan(
-        epoch, (stacked_params, stacked_opt), keys)
+        _isolated_epoch(epoch), (stacked_params, stacked_opt), keys)
     return stacked_params, stacked_opt, (loss[-1], bce[-1], kld[-1])
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_mutual_program(mesh, n_clients: int, vn_cfg: VisionNetConfig,
+                            sgd_cfg: SGDConfig, kl_weight: float,
+                            conv_impl: str):
+    n_dev = mesh.shape[stacking.CLIENT_AXIS]
+
+    def body(params, opt, pub_imgs, pub_labs, ks, pm_full):
+        gids = stacking.local_client_ids(n_clients, n_dev)
+        safe = jnp.minimum(gids, n_clients - 1)
+        real = (gids < n_clients).astype(jnp.float32)    # 0 on dummy slots
+        pm_loc = jnp.take(pm_full, safe) * real
+        pair_rows = jnp.take(_pair_mask(n_clients, pm_full), safe,
+                             axis=0) * real[:, None]
+
+        def epoch(carry, kk):
+            params, opt = carry
+            shared_loc = _predict_chunked(params, pub_imgs,
+                                          vn_cfg)        # (K_loc, B)
+            shared = jax.lax.stop_gradient(stacking.gather_clients(
+                shared_loc, n_clients, n_dev)[:n_clients])  # (K, B) natural
+            params, opt, (bce, kld) = _mutual_epoch_step(
+                params, opt, kk, pm_loc, pair_rows, shared, pub_imgs,
+                pub_labs, vn_cfg, sgd_cfg, kl_weight, conv_impl)
+            return (params, opt), (bce + kl_weight * kld, bce, kld)
+
+        (params, opt), (loss, bce, kld) = jax.lax.scan(
+            _isolated_epoch(epoch), (params, opt), ks)
+        return params, opt, (loss[-1], bce[-1], kld[-1])
+
+    spec = stacking.client_spec()
+    return jax.jit(sharding.shard_map(
+        body, mesh,
+        in_specs=(spec, spec, P(), P(), P(None, stacking.CLIENT_AXIS), P()),
+        out_specs=(spec, spec, (spec, spec, spec))))
+
+
+def _sharded_mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels,
+                         keys, part_mask, mesh, n_clients: int,
+                         vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                         kl_weight: float, conv_impl: str = "fused"):
+    """``_mutual_scan`` inside shard_map over the ``clients`` mesh axis.
+
+    Per mutual epoch each device forwards its own clients on the public
+    fold and the (K_loc, B_pub) predictions are all-gathered — the ONLY
+    cross-device collective of the whole round, and precisely the tensor
+    Algorithm 1 says crosses client boundaries.  The gathered fleet is
+    restored to natural client order (``stacking.gather_clients``) before
+    the Eq.-2 sum so reduction order — and hence every float — matches the
+    unsharded engine bitwise.  Each device then descends Eq. 1 for its own
+    clients only (rows of the pair-mask select them); dummies from the
+    round-robin padding are masked out of both the average and the update.
+    The reorder/pad runs eagerly outside the jitted program (see
+    ``_sharded_local_scan`` — in-jit gathers perturb body layouts).
+    """
+    n_dev = mesh.shape[stacking.CLIENT_AXIS]
+    run = _sharded_mutual_program(mesh, n_clients, vn_cfg, sgd_cfg,
+                                  kl_weight, conv_impl)
+    p, o, (loss, bce, kld) = run(
+        stacking.shard_clients(stacked_params, n_clients, n_dev),
+        stacking.shard_clients(stacked_opt, n_clients, n_dev),
+        pub_images, pub_labels,
+        stacking.shard_clients(keys, n_clients, n_dev, axis=1),
+        jnp.asarray(part_mask, jnp.float32))
+    unshard = lambda t: stacking.unshard_clients(t, n_clients, n_dev)
+    return unshard(p), unshard(o), (unshard(loss), unshard(bce),
+                                    unshard(kld))
 
 
 @functools.partial(jax.jit, static_argnames=("vn_cfg",))
@@ -214,10 +401,21 @@ def _accuracy_scan(stacked_params, images, labels, masks,
 # engine
 
 class FederatedTrainer:
-    """Runs Algorithm 1 on a (train_images, train_labels) pool."""
+    """Runs Algorithm 1 on a (train_images, train_labels) pool.
+
+    ``mesh``: optional jax Mesh with a ``clients`` axis — the round's two
+    training programs then run device-sharded over the client axis
+    (bitwise-identical results; see the sharded program docstrings).
+    """
 
     def __init__(self, vn_cfg: VisionNetConfig, fed_cfg: FederatedConfig,
-                 train_images: np.ndarray, train_labels: np.ndarray):
+                 train_images: np.ndarray, train_labels: np.ndarray,
+                 mesh=None):
+        if mesh is not None and stacking.CLIENT_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"mesh needs a '{stacking.CLIENT_AXIS}' axis, got "
+                f"{mesh.axis_names}")
+        self.mesh = mesh
         self.vn_cfg = vn_cfg
         self.fed = fed_cfg
         self.images = train_images
@@ -315,12 +513,43 @@ class FederatedTrainer:
             mask = mask * part_mask[:, None]
         imgs, labs = self._gather(idx)
         keys = self._split_keys(K, idx.shape[1])
-        self.client_params, self.client_opts, losses = _local_scan(
-            self.client_params, self.client_opts, imgs, labs,
-            jnp.asarray(mask), keys, self.vn_cfg, self.sgd_cfg,
-            conv_impl="fused" if K > 1 else "native")
+        if self.mesh is not None and K > 1:
+            self._to_mesh()
+            self.client_params, self.client_opts, losses = \
+                _sharded_local_scan(self.client_params, self.client_opts,
+                                    imgs, labs, jnp.asarray(mask), keys,
+                                    self.mesh, K, self.vn_cfg, self.sgd_cfg,
+                                    conv_impl="fused")
+        else:
+            self.client_params, self.client_opts, losses = _local_scan(
+                self.client_params, self.client_opts, imgs, labs,
+                jnp.asarray(mask), keys, self.vn_cfg, self.sgd_cfg,
+                conv_impl="fused" if K > 1 else "native")
         self.dispatch_log.append((self._round_idx, "local_scan"))
         return folds, [float(x) for x in np.asarray(losses)]
+
+    def _gather_clients_host(self):
+        """Commit the (possibly client-sharded) client state to one device.
+        The weight-sharing baselines gather every client's weights by
+        definition; doing it explicitly keeps their sync math — reduction
+        order included — bitwise-identical to the unsharded engine."""
+        if self.mesh is None:
+            return
+        dev = jax.devices()[0]
+        self.client_params = jax.device_put(self.client_params, dev)
+        self.client_opts = jax.device_put(self.client_opts, dev)
+
+    def _to_mesh(self):
+        """Re-place single-device-committed client state onto the mesh
+        (after a weight-sharing sync gathered it) so the sharded programs
+        see consistent devices; DML chains keep their sharded placement."""
+        leaf = jax.tree.leaves(self.client_params)[0]
+        if not isinstance(getattr(leaf, "sharding", None),
+                          jax.sharding.SingleDeviceSharding):
+            return
+        sh = jax.sharding.NamedSharding(self.mesh, P())
+        self.client_params = jax.device_put(self.client_params, sh)
+        self.client_opts = jax.device_put(self.client_opts, sh)
 
     def _fold_accuracies(self, folds) -> List[float]:
         """Each client scored on its OWN fold — one vmapped dispatch over a
@@ -391,11 +620,21 @@ class FederatedTrainer:
             pub_imgs = jnp.asarray(self.images[pub])
             pub_labs = jnp.asarray(self.labels[pub])
             keys = self._split_keys(self.fed.mutual_epochs, K)
-            self.client_params, self.client_opts, (loss, _, kld) = \
-                _mutual_scan(self.client_params, self.client_opts, pub_imgs,
-                             pub_labs, keys, jnp.asarray(pm), self.vn_cfg,
-                             self.sgd_cfg, self.fed.kl_weight,
-                             conv_impl="fused" if K > 1 else "native")
+            if self.mesh is not None and K > 1:
+                self.client_params, self.client_opts, (loss, _, kld) = \
+                    _sharded_mutual_scan(self.client_params,
+                                         self.client_opts, pub_imgs,
+                                         pub_labs, keys, jnp.asarray(pm),
+                                         self.mesh, K, self.vn_cfg,
+                                         self.sgd_cfg, self.fed.kl_weight,
+                                         conv_impl="fused")
+            else:
+                self.client_params, self.client_opts, (loss, _, kld) = \
+                    _mutual_scan(self.client_params, self.client_opts,
+                                 pub_imgs, pub_labs, keys, jnp.asarray(pm),
+                                 self.vn_cfg, self.sgd_cfg,
+                                 self.fed.kl_weight,
+                                 conv_impl="fused" if K > 1 else "native")
             self.dispatch_log.append((r, "mutual_scan"))
             local_losses = [float(x) * m for x, m in
                             zip(np.asarray(loss), pm)]
@@ -410,6 +649,7 @@ class FederatedTrainer:
         K = self.fed.n_clients
         pm = self._part_mask(part)
         _, losses = self._local_round(pm if len(part) < K else None)
+        self._gather_clients_host()
         self.folds.pop()                                  # global fold unused
         if len(part) == K:
             self.client_params = fedavg.average_weights(self.client_params)
@@ -429,6 +669,7 @@ class FederatedTrainer:
         K = self.fed.n_clients
         pm = self._part_mask(part)
         folds, losses = self._local_round(pm if len(part) < K else None)
+        self._gather_clients_host()
         scores = self._fold_accuracies(folds)
         # absentees contribute no weight to the aggregate and receive none
         # of it back (scores masked -> their average weight is 0)
@@ -513,6 +754,7 @@ class FederatedTrainer:
     # -- final eval (paper Table II / Fig. 3) ------------------------------
     def evaluate(self, test_images: np.ndarray, test_labels: np.ndarray):
         self._round_idx = self.fed.rounds                  # eval phase
+        self._gather_clients_host()
         self.history.client_test_acc = [
             float(a) for a in self._accuracy_chunked(
                 self.client_params, test_images, test_labels)]

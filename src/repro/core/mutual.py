@@ -38,8 +38,22 @@ def _pair_mask(K: int, part_mask):
     return pair / denom
 
 
+def mutual_kl_terms_vs(live_logits, fixed_logits, pair_w,
+                       temperature: float = 1.0):
+    """Rectangular Eq. 2: (Kl, B, V) live x (Kg, B, V) fixed -> (Kl, B).
+
+    out[i, b] = sum_j pair_w[i, j] * KL(softmax(live_i) || softmax(fixed_j))
+    with explicit (Kl, Kg) pair weights.  This is the device-local shard of
+    ``mutual_kl_terms``: rows are this device's clients, columns the
+    all-gathered fleet (``stacking.gather_clients``), and ``pair_w`` the
+    matching rows of ``_pair_mask``.  The math IS the kernel oracle.
+    """
+    return ref.mutual_kl_pair(live_logits, fixed_logits, pair_w,
+                              temperature=temperature)
+
+
 def mutual_kl_terms(live_logits, fixed_logits, temperature: float = 1.0,
-                    part_mask=None):
+                    part_mask=None, impl=None):
     """Eq. 2 with the j-side fixed.  (K, B, V) x (K, B, V) -> (K, B).
 
     out[i, b] = 1/(K-1) sum_{j != i} KL(softmax(live_i) || softmax(fixed_j)).
@@ -47,17 +61,20 @@ def mutual_kl_terms(live_logits, fixed_logits, temperature: float = 1.0,
     federated gradient semantics (others' predictions are received data).
     ``part_mask`` (K,) 0/1 drops non-participants from both sides of the
     average (partial participation: M <= K clients per round).
+
+    ``impl`` (default: ``ops.get_impl()``): 'ref' keeps the plain-JAX graph
+    (AD-derived gradients); 'interpret'/'pallas' route through the fused
+    streaming kernel with its custom-VJP blocked backward
+    (``ops.mutual_kl_pair``) — the Eq.-2 TRAINING hot path at vocab scale.
     """
     K = live_logits.shape[0]
-    lp_live = jax.nn.log_softmax(
-        live_logits.astype(jnp.float32) / temperature, axis=-1)
-    p_live = jnp.exp(lp_live)
-    lp_fixed = jax.nn.log_softmax(
-        fixed_logits.astype(jnp.float32) / temperature, axis=-1)
-    self_term = jnp.sum(p_live * lp_live, axis=-1)          # (K,B)
-    cross = jnp.einsum("ibv,jbv->ijb", p_live, lp_fixed)    # (i,j,B)
-    kl = self_term[:, None, :] - cross
-    return jnp.sum(kl * _pair_mask(K, part_mask)[:, :, None], axis=1)
+    impl = impl or ops.get_impl()
+    pair_w = _pair_mask(K, part_mask)
+    if impl != "ref":
+        return ops.mutual_kl_pair(live_logits, fixed_logits, pair_w,
+                                  temperature=temperature, impl=impl)
+    return mutual_kl_terms_vs(live_logits, fixed_logits, pair_w,
+                              temperature=temperature)
 
 
 def mutual_kl_loss(all_logits, temperature: float = 1.0,
@@ -125,6 +142,8 @@ def _distributed_topk(logp, k: int):
     vocab_ax = rules.get("vocab")
     client_ax = rules.get("client")
     axes = mesh.axis_names
+    if isinstance(client_ax, tuple):      # e.g. ("clients", "pod")
+        client_ax = next((a for a in client_ax if a in axes), None)
     vocab_ax = vocab_ax if vocab_ax in axes else None
     client_ax = client_ax if (client_ax in axes and
                               logp.shape[0] % mesh.shape[client_ax] == 0) \
@@ -213,6 +232,17 @@ def sparse_share_bytes(n_clients: int, n_examples: int, k: int) -> int:
 # ---------------------------------------------------------------------------
 # Bernoulli case (VisionNet sigmoid head — the paper's actual case study)
 
+def bernoulli_mutual_terms_vs(live_probs, fixed_probs, pair_w):
+    """Rectangular Bernoulli Eq. 2: (Kl, B) live x (Kg, B) fixed -> (Kl, B)
+    with explicit (Kl, Kg) pair weights — the device-local shard of
+    ``bernoulli_mutual_terms`` (rows = local clients, columns = the
+    all-gathered fleet's shared predictions)."""
+    pi = jnp.clip(live_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)[:, None, :]
+    pj = jnp.clip(fixed_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)[None, :, :]
+    kl = pi * jnp.log(pi / pj) + (1 - pi) * jnp.log((1 - pi) / (1 - pj))
+    return jnp.sum(kl * pair_w[:, :, None], axis=1)         # (Kl,B)
+
+
 def bernoulli_mutual_terms(live_probs, fixed_probs, part_mask=None):
     """Eq. 2 with the j-side fixed, Bernoulli case: (K,B) x (K,B) -> (K,B).
 
@@ -223,10 +253,8 @@ def bernoulli_mutual_terms(live_probs, fixed_probs, part_mask=None):
     average (partial participation: M <= K clients per round).
     """
     K = live_probs.shape[0]
-    pi = jnp.clip(live_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)[:, None, :]
-    pj = jnp.clip(fixed_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)[None, :, :]
-    kl = pi * jnp.log(pi / pj) + (1 - pi) * jnp.log((1 - pi) / (1 - pj))
-    return jnp.sum(kl * _pair_mask(K, part_mask)[:, :, None], axis=1)  # (K,B)
+    return bernoulli_mutual_terms_vs(live_probs, fixed_probs,
+                                     _pair_mask(K, part_mask))
 
 
 def bernoulli_mutual_loss(all_probs, stop_grad_others: bool = True,

@@ -12,8 +12,23 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
 Params = Any
+
+# the mesh axis name the client dimension shards over (launch.mesh builds
+# 1-D ("clients",) meshes; multi-pod rules map logical "client" -> "pod")
+CLIENT_AXIS = "clients"
+
+# canonical vmap width of the stacked round programs (see
+# ``chunked_client_map``): XLA specialises op lowerings on the vmapped
+# width (grouped-conv algorithm choice, GEMM/reduce tiling), so programs
+# holding different client counts round differently.  Fixing the width
+# makes every per-client op's lowering identical whether a program holds
+# the full K (unsharded engine) or one device's slice (sharded engine) —
+# the foundation of the bitwise sharded == unsharded guarantee.
+CLIENT_CHUNK = 2
 
 
 def stacked_init(key, init_fn: Callable[[jax.Array], Params],
@@ -73,3 +88,120 @@ def stack_params(params_list: Sequence[Params]) -> Params:
 
 def unstack_params(stacked: Params, k: int):
     return [client_slice(stacked, i) for i in range(k)]
+
+
+# ---------------------------------------------------------------------------
+# device-sharded client axis: round-robin layout + partition-spec/gather
+# helpers shared by the shard_map'ed round engines.
+#
+# Clients spill round-robin over the mesh: global client c lives on device
+# c % n_devices at local slot c // n_devices, so an uneven K loads every
+# device within one client of its neighbours.  Every device always owns
+# K_loc >= 2 slots (short devices wrap around to re-host a real client as a
+# masked dummy): XLA specialises size-1 vmapped dims onto different kernels
+# (plain vs grouped conv, degenerate batched GEMMs), which breaks the
+# bitwise sharded == unsharded parity the engine guarantees.
+
+
+def client_layout(n_clients: int, n_devices: int):
+    """(K_loc, K_pad) for K clients over an n_devices 'clients' mesh axis.
+    K_loc is rounded up to a multiple of ``CLIENT_CHUNK`` so every device
+    runs whole canonical-width chunks."""
+    k_loc = -(-n_clients // n_devices)
+    k_loc = -(-k_loc // CLIENT_CHUNK) * CLIENT_CHUNK
+    return k_loc, n_devices * k_loc
+
+
+def chunked_client_map(fn, args, n_clients: int, const_args=(),
+                       width: int = CLIENT_CHUNK):
+    """Run a stacked-client program in fixed width-``CLIENT_CHUNK`` chunks.
+
+    ``fn`` takes (chunk_args, const_args): ``chunk_args`` mirror ``args``
+    (full n_clients-stacked operands) sliced to leading axis ``width``;
+    ``const_args`` are passed whole to every chunk (e.g. the shared
+    public-fold predictions).  K is padded up to a chunk multiple by
+    wrapping (duplicated clients — callers mask/discard the tail) and the
+    chunks run under ``lax.map``, so the per-client XLA lowering is
+    width-canonical: a device-sharded program holding 2 clients and the
+    unsharded program holding all K execute bit-identical per-client
+    arithmetic.  optimization_barrier pins every chunk body (inputs,
+    constants, outputs) as its own compilation unit — XLA inlines
+    trip-count-1 loops, and an inlined body would otherwise fuse with
+    surrounding ops and round differently from the same body inside a
+    multi-chunk loop.  Returns outputs with leading axis n_clients.
+    """
+    k_pad = -(-n_clients // width) * width
+    if k_pad != n_clients:
+        wrap = jnp.arange(k_pad) % n_clients
+        args = jax.tree.map(lambda x: jnp.take(x, wrap, axis=0), args)
+    n_chunks = k_pad // width
+    const_args = jax.lax.optimization_barrier(const_args) if const_args \
+        else const_args
+
+    def isolated(chunk_args):
+        out = fn(jax.lax.optimization_barrier(chunk_args), const_args)
+        return jax.lax.optimization_barrier(out)
+
+    xs = jax.tree.map(lambda x: x.reshape((n_chunks, width) + x.shape[1:]),
+                      args)
+    out = jax.lax.map(isolated, xs)
+    return jax.tree.map(
+        lambda x: x.reshape((k_pad,) + x.shape[2:])[:n_clients], out)
+
+
+def rr_send_indices(n_clients: int, n_devices: int) -> np.ndarray:
+    """(K_pad,) gather plan: sharded position p = d * K_loc + i holds global
+    client (i * n_devices + d) % K — dummies wrap to real clients so padded
+    forwards stay finite (their updates are masked/discarded)."""
+    k_loc, k_pad = client_layout(n_clients, n_devices)
+    pos = np.arange(k_pad)
+    d, i = pos // k_loc, pos % k_loc
+    return (i * n_devices + d) % n_clients
+
+
+def rr_inverse_indices(n_clients: int, n_devices: int) -> np.ndarray:
+    """(K_pad,) inverse plan: natural client/pad id c -> sharded position
+    (c % n_devices) * K_loc + c // n_devices.  First K entries undo
+    ``rr_send_indices``; the tail locates the dummy slots."""
+    k_loc, k_pad = client_layout(n_clients, n_devices)
+    c = np.arange(k_pad)
+    return (c % n_devices) * k_loc + c // n_devices
+
+
+def shard_clients(tree: Params, n_clients: int, n_devices: int,
+                  axis: int = 0) -> Params:
+    """Natural K-stacked pytree -> K_pad-stacked round-robin layout."""
+    send = jnp.asarray(rr_send_indices(n_clients, n_devices))
+    return jax.tree.map(lambda x: jnp.take(x, send, axis=axis), tree)
+
+
+def unshard_clients(tree: Params, n_clients: int, n_devices: int,
+                    axis: int = 0) -> Params:
+    """Round-robin K_pad layout -> natural K-stacked pytree (drops dummies)."""
+    inv = jnp.asarray(rr_inverse_indices(n_clients, n_devices)[:n_clients])
+    return jax.tree.map(lambda x: jnp.take(x, inv, axis=axis), tree)
+
+
+def client_spec(*tail, axis_name: str = CLIENT_AXIS) -> P:
+    """PartitionSpec sharding dim 0 over the client mesh axis; ``tail``
+    entries (None or axis names) spec the remaining dims."""
+    return P(axis_name, *tail)
+
+
+def gather_clients(x: jax.Array, n_clients: int, n_devices: int,
+                   axis_name: str = CLIENT_AXIS) -> jax.Array:
+    """All-gather a per-device (K_loc, ...) shard into the full (K_pad, ...)
+    tensor in NATURAL client order (pads trailing) — inside a shard_map
+    body this is the round engines' ONLY cross-device collective (the
+    public-set predictions of paper Eq. 2)."""
+    gathered = jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+    inv = jnp.asarray(rr_inverse_indices(n_clients, n_devices))
+    return jnp.take(gathered, inv, axis=0)
+
+
+def local_client_ids(n_clients: int, n_devices: int,
+                     axis_name: str = CLIENT_AXIS) -> jax.Array:
+    """(K_loc,) global ids of this device's slots (ids >= n_clients are
+    wrapped dummies).  Only meaningful inside a shard_map body."""
+    k_loc, _ = client_layout(n_clients, n_devices)
+    return jnp.arange(k_loc) * n_devices + jax.lax.axis_index(axis_name)

@@ -19,6 +19,7 @@ from typing import Optional
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.kl_mutual import kl_mutual as _kl_mutual_pallas
+from repro.kernels.kl_mutual import kl_mutual_pair as _kl_mutual_pair
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 _local = threading.local()
@@ -74,6 +75,21 @@ def mutual_kl(logits, *, temperature: float = 1.0, impl: Optional[str] = None):
         return ref.mutual_kl(logits, temperature=temperature)
     return _kl_mutual_pallas(logits, temperature=temperature,
                              interpret=(impl == "interpret"))
+
+
+def mutual_kl_pair(live, fixed, pair_w, *, temperature: float = 1.0,
+                   impl: Optional[str] = None):
+    """Pair-weighted rectangular Eq. 2: (Kl, B, V) live x (Kg, B, V) fixed
+    with (Kl, Kg) weights -> (Kl, B).  DIFFERENTIABLE: kernel impls carry
+    a custom VJP whose backward streams over vocab blocks; 'ref' is the
+    plain-JAX oracle graph (AD-derived gradients).  The Eq.-2 training
+    hot path — ``core.mutual.mutual_kl_terms`` routes here."""
+    impl = impl or get_impl()
+    if impl == "ref":
+        return ref.mutual_kl_pair(live, fixed, pair_w,
+                                  temperature=temperature)
+    return _kl_mutual_pair(live, fixed, pair_w, temperature=temperature,
+                           interpret=(impl == "interpret"))
 
 
 def ssd(x, dt, A, B_mat, C_mat, *, chunk: int = 256, initial_state=None,

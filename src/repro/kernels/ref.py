@@ -128,6 +128,25 @@ def mutual_kl(logits, temperature: float = 1.0):
     return jnp.sum(kl * mask, axis=1) / denom
 
 
+def mutual_kl_pair(live, fixed, pair_w, temperature: float = 1.0):
+    """Pair-weighted rectangular Eq. 2 oracle.
+
+    live: (Kl, B, V) — differentiable side.  fixed: (Kg, B, V).
+    pair_w: (Kl, Kg) weights (e.g. the masked 1/(M-1) average).  Returns
+    (Kl, B): out[i, b] = sum_j pair_w[i, j] * KL(P_i(b) || Q_j(b)).
+    ``mutual_kl(x) == mutual_kl_pair(x, x, (1 - I) / (K - 1))``.
+    """
+    lp_live = jax.nn.log_softmax(
+        live.astype(jnp.float32) / temperature, axis=-1)
+    p_live = jnp.exp(lp_live)
+    lp_fixed = jax.nn.log_softmax(
+        fixed.astype(jnp.float32) / temperature, axis=-1)
+    self_term = jnp.sum(p_live * lp_live, axis=-1)          # (Kl,B)
+    cross = jnp.einsum("ibv,jbv->ijb", p_live, lp_fixed)    # (i,j,B)
+    kl = self_term[:, None, :] - cross
+    return jnp.sum(kl * pair_w.astype(jnp.float32)[:, :, None], axis=1)
+
+
 def bernoulli_mutual_kl(probs):
     """Eq. 2 for the paper's sigmoid binary head.  probs: (K, B) in (0,1)."""
     K = probs.shape[0]

@@ -26,6 +26,39 @@ def make_cpu_mesh(shape=(2, 2), axes=("data", "model")):
     return make_mesh(shape, axes)
 
 
+def make_client_mesh(n_devices: int = 0):
+    """1-D ``clients`` mesh over the first n devices (0 -> all available).
+
+    The federated round engines shard whole clients over this axis;
+    K > n_devices spills round-robin (core.stacking.client_layout).  On a
+    CPU-only host, fake devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before jax
+    initialises (tests/conftest.py and benchmarks/run.py do this).
+    """
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(
+            f"mesh wants {n} devices but only {len(devs)} are visible; on "
+            "CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before jax initialises")
+    return make_mesh((n,), ("clients",), devices=devs[:n])
+
+
+def parse_mesh_spec(spec: str) -> dict:
+    """'clients=4' / 'clients=4,data=2' -> {'clients': 4, 'data': 2}."""
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, num = part.partition("=")
+        if not num.isdigit():
+            raise ValueError(f"bad mesh spec {spec!r}: expected axis=N")
+        out[name.strip()] = int(num)
+    return out
+
+
 @dataclass(frozen=True)
 class HardwareSpec:
     """TPU v5e (the dry-run/roofline target)."""

@@ -11,6 +11,13 @@ whole stack.
       --method dml --clients 3 --steps 12
   PYTHONPATH=src python -m repro.launch.train --method hetero \
       --archs qwen3-4b,mamba2-780m,dbrx-132b --rounds 3 --participation 2
+
+Device-sharded DML (one device owns whole clients; the only collective is
+the public-logit all-gather — see core.distributed.make_sharded_dml_step):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --method dml --clients 4 \
+      --steps 8 --mesh clients=4
 """
 from __future__ import annotations
 
@@ -80,6 +87,10 @@ def main(argv=None) -> int:
     ap.add_argument("--kl-weight", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None, help="checkpoint path")
+    ap.add_argument("--mesh", default=None, metavar="clients=N",
+                    help="device-shard the DML client axis over a "
+                         "'clients' mesh of N devices (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count first)")
     # hetero-only knobs: one arch PER client; round-based schedule
     ap.add_argument("--archs", default="qwen3-4b,mamba2-780m,dbrx-132b",
                     help="comma-separated arch id per client (hetero)")
@@ -129,8 +140,19 @@ def main(argv=None) -> int:
         K = args.clients
         params = dml.stacked_init(key, cfg, K)
         opt = dml.stacked_adamw_init(params)
-        step_fn = jax.jit(dml.make_dml_train_step(
-            cfg, opt_cfg, kl_weight=args.kl_weight))
+        if args.mesh:
+            from repro.launch.mesh import make_client_mesh, parse_mesh_spec
+            axes = parse_mesh_spec(args.mesh)
+            if set(axes) != {"clients"}:
+                raise SystemExit(f"--mesh supports clients=N, got {args.mesh}")
+            mesh = make_client_mesh(axes["clients"])
+            print(f"sharding {K} clients over {axes['clients']} devices "
+                  "(all-gather of public logits is the only collective)")
+            step_fn = jax.jit(dml.make_sharded_dml_step(
+                cfg, opt_cfg, mesh, K, kl_weight=args.kl_weight))
+        else:
+            step_fn = jax.jit(dml.make_dml_train_step(
+                cfg, opt_cfg, kl_weight=args.kl_weight))
         for i in range(args.steps):
             priv = [batch_for(d, i, args.batch) for d in range(K)]
             tokens = jnp.stack([b[0] for b in priv])

@@ -23,7 +23,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 DEFAULT_RULES: Dict[str, Optional[str]] = {
     "batch": ("pod", "data"),     # standard mode: pure DP across pods
     "attn_batch": ("pod", "data"),  # attention activations; hillclimb remaps
-    "client": "pod",          # FL client axis (multi-pod) — remapped in tests
+    # FL client axis: a dedicated 1-D "clients" mesh (launch.mesh
+    # .make_client_mesh — the shard_map'ed round engines) when present,
+    # else the multi-pod "pod" axis; remapped in tests
+    "client": ("clients", "pod"),
     "seq": None,
     "res_seq": None,     # residual-stream seq dim; "seqpar" variant -> model
     "kv_seq": "model",        # decode KV-cache sequence sharding when heads < tp

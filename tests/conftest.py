@@ -1,0 +1,50 @@
+"""Shared pytest harness: multi-device CPU testing.
+
+Sharding tests need several XLA devices, which a CPU-only CI host fakes
+via ``--xla_force_host_platform_device_count`` — but that flag must be in
+the environment BEFORE jax initialises, so it cannot be a normal fixture.
+This conftest sets it at import time (conftest imports precede all test
+modules and their ``import jax``) whenever a multi-device run is
+requested:
+
+  python -m pytest -m multidevice            # the CI job
+  python -m pytest tests/test_multidevice.py
+  REPRO_HOST_DEVICES=8 python -m pytest ...  # explicit device count
+
+The default tier-1 run stays single-device (the flag also splits the CPU
+between fake devices, which would slow every other test); ``multidevice``
+-marked tests are then skipped.
+"""
+import os
+import sys
+
+_N = os.environ.get("REPRO_HOST_DEVICES", "")
+if not _N and any("multidevice" in str(a) for a in sys.argv):
+    _N = "8"
+if _N and "jax" not in sys.modules:
+    _flag = f"--xla_force_host_platform_device_count={_N}"
+    os.environ["XLA_FLAGS"] = " ".join(
+        x for x in (os.environ.get("XLA_FLAGS", ""), _flag) if x)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: needs multiple (fake) XLA host devices; run with "
+        "`pytest -m multidevice` (conftest then sets XLA_FLAGS) or set "
+        "REPRO_HOST_DEVICES=N")
+
+
+def pytest_collection_modifyitems(config, items):
+    import pytest
+    n_devices = None
+    for item in items:
+        if item.get_closest_marker("multidevice") is None:
+            continue
+        if n_devices is None:
+            import jax
+            n_devices = len(jax.devices())
+        if n_devices < 4:
+            item.add_marker(pytest.mark.skip(
+                reason=f"needs >= 4 XLA host devices, have {n_devices} "
+                       "(run with -m multidevice)"))

@@ -110,3 +110,72 @@ def test_temperature_softening_reduces_kl():
     k1 = float(jnp.mean(mutual.mutual_kl_loss(logits, temperature=1.0)))
     k4 = float(jnp.mean(mutual.mutual_kl_loss(logits, temperature=4.0)))
     assert k4 < k1
+
+
+# ---------------------------------------------------------------------------
+# _pair_mask invariants (partial-participation Eq.-2 averaging)
+
+
+@settings(max_examples=40, deadline=None)
+@given(K=st.integers(2, 9), m_bits=st.integers(0, 511),
+       seed=st.integers(0, 100))
+def test_pair_mask_properties(K, m_bits, seed):
+    """For any participation pattern: zero diagonal, zero rows/cols for
+    absentees, symmetric support, and participant rows summing to exactly
+    1 when M >= 2 (the 1/(M-1) average)."""
+    pm = np.array([(m_bits >> i) & 1 for i in range(K)], np.float32)
+    W = np.asarray(mutual._pair_mask(K, jnp.asarray(pm)))
+    M = int(pm.sum())
+    assert W.shape == (K, K)
+    np.testing.assert_allclose(np.diag(W), 0.0)
+    for i in range(K):
+        if pm[i] == 0:
+            np.testing.assert_allclose(W[i], 0.0)
+            np.testing.assert_allclose(W[:, i], 0.0)
+    np.testing.assert_array_equal(W > 0, W.T > 0)
+    if M >= 2:
+        rows = W.sum(axis=1)
+        np.testing.assert_allclose(rows[pm > 0], 1.0, atol=1e-6)
+
+
+def test_pair_mask_none_equals_full():
+    """part_mask=None is the all-participants mask, exactly."""
+    for K in (2, 3, 5, 8):
+        a = np.asarray(mutual._pair_mask(K, None))
+        b = np.asarray(mutual._pair_mask(K, jnp.ones((K,))))
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_allclose(a, (1.0 - np.eye(K)) / max(K - 1, 1))
+
+
+def test_pair_mask_single_participant_zero():
+    """M <= 1: nobody has a peer — the whole mask vanishes (no division
+    blow-up from the M-1 denominator)."""
+    for K in (2, 4):
+        for pm in (np.zeros((K,)), np.eye(K)[0]):
+            W = np.asarray(mutual._pair_mask(K, jnp.asarray(pm)))
+            np.testing.assert_allclose(W, 0.0)
+
+
+def test_terms_vs_rectangular_matches_square():
+    """mutual_kl_terms == its rectangular shard with full-fleet rows —
+    the identity the device-sharded engines rely on."""
+    K, B, V = 4, 5, 33
+    live = jax.random.normal(jax.random.PRNGKey(3), (K, B, V)) * 2
+    pm = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    W = mutual._pair_mask(K, pm)
+    full = mutual.mutual_kl_terms(live, live, part_mask=pm, impl="ref")
+    for i in range(K):
+        rows = mutual.mutual_kl_terms_vs(live[i:i + 1], live, W[i:i + 1])
+        np.testing.assert_allclose(np.asarray(rows[0]),
+                                   np.asarray(full[i]), atol=1e-5)
+
+
+def test_bernoulli_terms_vs_rectangular_matches_square():
+    K, B = 5, 7
+    probs = jax.nn.sigmoid(
+        jax.random.normal(jax.random.PRNGKey(4), (K, B)) * 2)
+    pm = jnp.asarray([1.0, 0.0, 1.0, 1.0, 1.0])
+    W = mutual._pair_mask(K, pm)
+    full = mutual.bernoulli_mutual_terms(probs, probs, part_mask=pm)
+    part = mutual.bernoulli_mutual_terms_vs(probs[1:3], probs, W[1:3])
+    np.testing.assert_array_equal(np.asarray(full[1:3]), np.asarray(part))
