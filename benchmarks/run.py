@@ -5,6 +5,9 @@
   bench_comm     communication bytes/round (the bandwidth claim), CNN + LLM
   bench_hetero   heterogeneous-client DML (transformer+SSM+MoE) incl.
                  partial participation comm scaling
+  bench_api      the unified Federation session layer: per-round jit
+                 dispatch counts unchanged vs the PR-1 engine (asserted)
+                 + bitwise parity + sparse-vs-dense comm ratios
   bench_sharded  device-sharded DML rounds: wall-clock + dispatches vs
                  device count (fake CPU host devices), bitwise-checked
   bench_kernels  kernel wrappers: us_per_call + derived FLOP counts
@@ -220,6 +223,72 @@ def bench_hetero() -> None:
                 total_comm_bytes=h.total_comm_bytes)
 
 
+def bench_api() -> None:
+    """The unified Federation API has NO abstraction overhead: for every
+    strategy the session layer dispatches exactly the per-round jitted
+    programs of the PR-1 engine (dml: local_scan + mutual_scan; fedavg:
+    local_scan; async: 2x local_scan + accuracy_scan) and reproduces the
+    legacy FederatedConfig-driven trainer bitwise.  Also reports the
+    sparse-vs-dense comm ratio of the hetero population."""
+    from repro.api import (DML, AsyncWeights, FedAvg, Federation,
+                           HeteroClients, SparseDML, VisionClients,
+                           make_lm_pool)
+    # per-round dispatch counts of the PR-1 engine (asserted, not assumed)
+    PR1_DISPATCHES = {"dml": {"local_scan": 1, "mutual_scan": 1},
+                      "fedavg": {"local_scan": 1},
+                      "async": {"local_scan": 2, "accuracy_scan": 1}}
+    print("\n# api: strategy,dispatches_per_round,programs,"
+          "bitwise_vs_legacy,comm_bytes_per_round")
+    vn = vn_reduced()
+    rounds = 2
+    n_tr = 400 if FAST else 1200
+    (tr_x, tr_y), _ = make_paper_datasets(image_size=vn.image_size,
+                                          n_train=n_tr, n_test=40)
+    strategies = {"dml": lambda: DML(), "fedavg": FedAvg,
+                  "async": lambda: AsyncWeights(delta=2, min_round=0)}
+    for name, make in strategies.items():
+        fc = FederatedConfig(method=name, n_clients=3, rounds=rounds,
+                             local_epochs=2, batch_size=16, delta=2,
+                             min_round=0, seed=0)
+        legacy = FederatedTrainer(vn, fc, tr_x, tr_y)
+        legacy.run()
+        fed = Federation(VisionClients(vn, tr_x, tr_y, n_clients=3,
+                                       rounds=rounds, local_epochs=2,
+                                       batch_size=16, seed=0), make())
+        fed.run()
+        bitwise = all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(jax.tree.leaves(legacy.client_params),
+                            jax.tree.leaves(fed.population.client_params)))
+        assert bitwise, f"{name}: Federation diverged from legacy trainer"
+        progs = [p for r, p in fed.dispatch_log if r == rounds - 1]
+        counts = {p: progs.count(p) for p in sorted(set(progs))}
+        assert counts == PR1_DISPATCHES[name], (
+            f"{name}: dispatch counts {counts} != PR-1 engine "
+            f"{PR1_DISPATCHES[name]} — the session layer added overhead")
+        row("api", strategy=name, dispatches_per_round=len(progs),
+            programs="+".join(f"{k}x{v}" for k, v in counts.items()),
+            bitwise_vs_legacy=bitwise,
+            comm_bytes_per_round=fed.history.rounds[-1].comm_bytes)
+    # sparse top-k vs dense comm on the hetero population
+    print("# api_sparse: strategy,k,comm_bytes_per_federation,vs_dense")
+    pool, labels = make_lm_pool(160, 24, 512, seed=0)
+    mk_pop = lambda: HeteroClients(("qwen3-4b", "mamba2-780m"), pool,
+                                   labels, rounds=2, local_epochs=1,
+                                   batch_size=2, public_batch=2, seed=0)
+    dense = Federation(mk_pop(), DML())
+    hd = dense.run()
+    row("api_sparse", strategy="dml", k="-",
+        comm_bytes_per_federation=hd.total_comm_bytes, vs_dense="1.0x")
+    for k in (8, 64):
+        sp = Federation(mk_pop(), SparseDML(k=k))
+        hs = sp.run()
+        assert hs.total_comm_bytes < hd.total_comm_bytes
+        row("api_sparse", strategy="sparse-dml", k=k,
+            comm_bytes_per_federation=hs.total_comm_bytes,
+            vs_dense=f"{hd.total_comm_bytes / hs.total_comm_bytes:.1f}x")
+
+
 def bench_sharded() -> None:
     """Device-sharded federated rounds (core.federated + shard_map over a
     ``clients`` mesh): steady-state round wall-clock and jitted dispatches
@@ -330,6 +399,7 @@ BENCHES = {
     "hard_task": bench_hard_task,
     "noniid": bench_noniid,
     "hetero": bench_hetero,
+    "api": bench_api,
     "sharded": bench_sharded,
     "kernels": bench_kernels,
 }

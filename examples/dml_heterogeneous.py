@@ -1,40 +1,51 @@
 """Beyond-weight-sharing: federated mutual learning across HETEROGENEOUS
 architectures — a dense transformer, an attention-free SSM, and a
-fine-grained MoE learn from each other through `repro.core.hetero`, the
-engine version of the paper's §I motivation ("different IoT devices ...
-might use different architectures").  Weight averaging is impossible here
-(the pytrees don't even match); loss sharing doesn't care — only the
-(K, N_pub, V) public-set logits ever cross a client boundary.
+fine-grained MoE learn from each other through the unified session API.
+Weight averaging is impossible here (the pytrees don't even match); the
+``Federation`` rejects ``FedAvg()`` on this population at construction,
+while prediction sharing (``DML``) — and its bandwidth-constrained
+``SparseDML(k)`` variant — just works: only the (K, N_pub, V) public-set
+logits (or their top-k compression) ever cross a client boundary.
 
   PYTHONPATH=src python examples/dml_heterogeneous.py
 """
 import numpy as np
 
-from repro.core.hetero import HeteroConfig, HeteroTrainer, make_lm_pool
+from repro.api import (DML, Federation, HeteroClients, SparseDML,
+                       make_lm_pool)
 
 ARCHS = ("qwen3-4b", "mamba2-780m", "dbrx-132b")   # dense / ssm / moe
 ROUNDS = 4
 
-cfg = HeteroConfig(archs=ARCHS, rounds=ROUNDS, local_epochs=1, batch_size=4,
-                   public_batch=4, lr=3e-3, kl_weight=2.0, seed=0)
 pool, labels = make_lm_pool(((1 + len(ARCHS)) * ROUNDS + 1) * 8,
                             seq_len=48, vocab=512, seed=0)
-trainer = HeteroTrainer(cfg, pool, labels)
+population = HeteroClients(ARCHS, pool, labels, rounds=ROUNDS,
+                           local_epochs=1, batch_size=4, public_batch=4,
+                           lr=3e-3, seed=0)
+session = Federation(population, DML(kl_weight=2.0))
 
 print("federating:", ", ".join(
-    f"{a} ({trainer._models[a].family})" for a in ARCHS))
-history = trainer.run()
+    f"{a} ({population._models[a].family})" for a in ARCHS))
+history = session.run()
 for rl in history.rounds:
     print(f"round {rl.round:3d}  local={['%.3f' % x for x in rl.client_loss]}"
           f"  cross-arch kld={['%.4f' % x for x in rl.kl_loss]}"
           f"  comm_bytes={rl.comm_bytes}")
 
-trainer.evaluate()
+session.evaluate()
 print(f"\nheld-out eval loss per client: "
       f"{['%.3f' % x for x in history.client_eval_loss]}")
 print(f"total logits traffic: {history.total_comm_bytes} bytes "
       f"(vs per-round weight averaging: undefined — "
-      f"client pytrees have {[f'{n:,}' for n in trainer.n_params]} params "
+      f"client pytrees have {[f'{n:,}' for n in population.n_params]} params "
       f"and different structures)")
-print("\nweight averaging across these clients is undefined "
-      "(different pytrees); prediction sharing just worked.")
+
+# the same fleet under sparse top-k sharing: V/(2k) fewer bytes
+sparse = Federation(
+    HeteroClients(ARCHS, pool, labels, rounds=ROUNDS, local_epochs=1,
+                  batch_size=4, public_batch=4, lr=3e-3, seed=0),
+    SparseDML(k=16, kl_weight=2.0))
+hs = sparse.run()
+print(f"\nsparse top-16 sharing: {hs.total_comm_bytes} bytes "
+      f"({history.total_comm_bytes / hs.total_comm_bytes:.0f}x below dense "
+      "DML; weight averaging remains undefined)")

@@ -2,8 +2,10 @@
 under Algorithm 1, all three frameworks, full fold discipline, evaluation
 on the unseen second dataset (paper Table II + Fig. 3/4).
 
-This is the end-to-end training driver: 5 clients x 12 rounds x local
-epochs = a few hundred optimizer steps per framework.
+Each framework is the SAME session with a different sharing strategy —
+the unified API makes the paper's comparison axis literal:
+
+    Federation(VisionClients(...), DML() | FedAvg() | AsyncWeights())
 
   PYTHONPATH=src python examples/federated_visionnet.py [--rounds 12] [--fast]
 """
@@ -11,8 +13,8 @@ import argparse
 
 import numpy as np
 
-from repro.configs.visionnet import CONFIG, reduced
-from repro.core.federated import FederatedConfig, FederatedTrainer
+from repro.api import DML, AsyncWeights, FedAvg, Federation, VisionClients
+from repro.configs.visionnet import reduced
 from repro.data.synthetic import make_paper_datasets
 
 ap = argparse.ArgumentParser()
@@ -22,7 +24,7 @@ ap.add_argument("--fast", action="store_true",
                 help="reduced image size + fewer rounds (CI-sized)")
 args = ap.parse_args()
 
-vn = reduced() if args.fast else reduced()  # 32px CNN; full 100px is slow on CPU
+vn = reduced()                 # 32px CNN; full 100px is slow on CPU
 rounds = 3 if args.fast else args.rounds
 clients = 3 if args.fast else args.clients
 n_train, n_test = (900, 300) if args.fast else (3833, 5988)  # paper Table I
@@ -31,18 +33,24 @@ n_train, n_test = (900, 300) if args.fast else (3833, 5988)  # paper Table I
     image_size=vn.image_size, n_train=n_train, n_test=n_test)
 print(f"dataset1 (train): {len(tr_x)}  dataset2 (unseen test): {len(te_x)}")
 
+strategies = {
+    "fedavg": FedAvg(),
+    "async": AsyncWeights(delta=3, min_round=5 if not args.fast else 1),
+    "dml": DML(kl_weight=1.0, mutual_epochs=1),
+}
+
 results = {}
-for method in ("fedavg", "async", "dml"):
-    fc = FederatedConfig(method=method, n_clients=clients, rounds=rounds,
-                         local_epochs=3, batch_size=16, lr=0.05,
-                         delta=3, min_round=5 if not args.fast else 1)
-    tr = FederatedTrainer(vn, fc, tr_x, tr_y)
-    h = tr.run()
-    n_disp = sum(1 for r, _ in tr.dispatch_log if 0 <= r < rounds)
-    h = tr.evaluate(te_x, te_y)
-    results[method] = h
+for name, strategy in strategies.items():
+    fed = Federation(
+        VisionClients(vn, tr_x, tr_y, n_clients=clients, rounds=rounds,
+                      local_epochs=3, batch_size=16, lr=0.05),
+        strategy)
+    h = fed.run()
+    n_disp = sum(1 for r, _ in fed.dispatch_log if 0 <= r < rounds)
+    h = fed.evaluate(split=(te_x, te_y))
+    results[name] = h
     accs = " ".join(f"{100 * a:5.2f}" for a in h.client_test_acc)
-    print(f"\n{method:8s} client accuracies: {accs}")
+    print(f"\n{name:8s} client accuracies: {accs}")
     print(f"{'':8s} round engine: {n_disp / rounds:.1f} jitted dispatches/round "
           f"(vs {clients} clients x batches in a host loop)")
     print(f"{'':8s} spread={100 * (max(h.client_test_acc) - min(h.client_test_acc)):.2f}pp "

@@ -1,54 +1,52 @@
-"""Quickstart: federated mutual learning across 3 LLM clients in ~a minute.
+"""Quickstart: federated mutual learning across 3 LLM clients in ~a minute,
+through the unified session API.
 
-Three clients (reduced qwen3-4b geometry) each train on a private synthetic
-domain; every step they also descend Eq. 1 on a shared public batch —
-sharing only logits, never weights.
-
-Clients live on the leading K axis of every param/opt leaf (the
-``core.stacking`` layout shared by the VisionNet round engine and the
-mesh-scale path), so one fused, jitted step trains all of them at once.
+One ``Federation`` composes a sharing strategy (``DML``: clients share
+only public-batch logits and descend Eq. 1 — never weights) with a client
+population (``LMClients``: K reduced-LLM clients stacked on the leading
+axis of every param/opt leaf, one fused jitted update per round).  Swap
+the strategy — ``SparseDML(k=64)``, ``FedAvg()``, ``AsyncWeights()`` —
+and nothing else changes; the session's comm ledger shows what each
+choice costs on the wire.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import DML, Federation, LMClients
 from repro.configs import get_reduced
-from repro.core import distributed as D
-from repro.data.synthetic import make_token_stream
-from repro.optim import AdamWConfig
 
-K, B, S, STEPS = 3, 2, 48, 15
+K, STEPS = 3, 15
 
 cfg = get_reduced("qwen3-4b")
 print(f"model: {cfg.name} (reduced: {cfg.n_layers}L d={cfg.d_model}) "
       f"x {K} clients")
 
-params = D.stacked_init(jax.random.PRNGKey(0), cfg, K)
-opt = D.stacked_adamw_init(params)
-step = jax.jit(D.make_dml_train_step(
-    cfg, AdamWConfig(lr=3e-3, warmup=3, total_steps=STEPS), kl_weight=2.0))
+# each client has its own bigram domain (non-IID); the public batch is
+# fresh every round ("dynamically changing test dataset", paper SIII.A)
+session = Federation(
+    LMClients(cfg, n_clients=K, rounds=STEPS, batch=2, seq=48, lr=3e-3),
+    DML(kl_weight=2.0))
+history = session.run()
 
-for i in range(STEPS):
-    # each client has its own domain (non-IID); the public batch is fresh
-    # every round ("dynamically changing test dataset", paper SIII.A)
-    private = jnp.stack([
-        jnp.asarray(make_token_stream(B, S, cfg.vocab_size,
-                                      seed=100 * i + d, domain=d))
-        for d in range(K)])
-    public = jnp.asarray(make_token_stream(B, S, cfg.vocab_size,
-                                           seed=7000 + i, domain=K))
-    params, opt, m = step(params, opt, private, public)
-    if i % 3 == 0 or i == STEPS - 1:
-        print(f"step {i:3d}  private={np.mean(m['private_loss']):.4f}  "
-              f"public_ce={np.mean(m['public_ce']):.4f}  "
-              f"kld_avg={np.mean(m['kld_avg']):.5f}")
+for rl in history.rounds:
+    if rl.round % 3 == 0 or rl.round == STEPS - 1:
+        print(f"step {rl.round:3d}  private={np.mean(rl.client_loss):.4f}  "
+              f"public_ce={np.mean(rl.public_ce):.4f}  "
+              f"kld_avg={np.mean(rl.kl_loss):.5f}")
 
-# the bandwidth story (paper's central claim), at this exact setup:
-n_params = cfg.param_count()
-logit_bytes = 2 * K * B * S * cfg.vocab_size * 4
-weight_bytes = 2 * K * n_params * 4
+# the bandwidth story (paper's central claim), at this exact setup: the
+# same session under weight sharing vs dense vs sparse prediction sharing
+from repro.core.fedavg import comm_bytes_per_round
+from repro.core.mutual import sparse_share_bytes
+
+logit_bytes = history.rounds[-1].comm_bytes
+weight_bytes = comm_bytes_per_round(
+    session.population.params_per_client, K)       # what FedAvg() would move
+pop = session.population  # public batch: max(1, batch//2) seqs x seq tokens
+positions = max(1, pop.batch // 2) * pop.seq
+sparse_bytes = sparse_share_bytes(K, positions, 64)  # what SparseDML(64) would
 print(f"\nper-round sharing: DML={logit_bytes / 1e6:.2f} MB "
       f"vs FedAvg={weight_bytes / 1e6:.2f} MB "
-      f"({weight_bytes / logit_bytes:.0f}x less traffic)")
+      f"({weight_bytes / logit_bytes:.0f}x less traffic; "
+      f"sparse top-64: {sparse_bytes / 1e3:.1f} kB)")

@@ -1,0 +1,44 @@
+"""Federated Learning via Distributed Mutual Learning — JAX reproduction.
+
+Public surface (PEP-562 lazy so ``import repro`` stays cheap and
+cycle-free; everything resolves through :mod:`repro.api`):
+
+    repro.Federation          the strategy-composable session layer
+    repro.DML / SparseDML / FedAvg / AsyncWeights     sharing strategies
+    repro.VisionClients / HeteroClients / LMClients   client populations
+    repro.checkpoint          flat-npz pytree checkpointing
+
+Everything else (kernels, models, launch drivers) is importable as
+submodules: ``repro.core``, ``repro.models``, ``repro.kernels``, ...
+"""
+from __future__ import annotations
+
+__version__ = "0.5.0"
+
+__all__ = [
+    "Federation", "History", "RoundLog",
+    "Strategy", "Payload", "get_strategy",
+    "DML", "SparseDML", "FedAvg", "AsyncWeights",
+    "Population", "VisionClients", "HeteroClients", "LMClients",
+    "api", "checkpoint", "__version__",
+]
+
+_API_NAMES = {
+    "Federation", "History", "RoundLog", "Strategy", "Payload",
+    "get_strategy", "DML", "SparseDML", "FedAvg", "AsyncWeights",
+    "Population", "VisionClients", "HeteroClients", "LMClients",
+}
+
+
+def __getattr__(name: str):
+    if name in _API_NAMES:
+        from repro import api
+        return getattr(api, name)
+    if name in ("api", "checkpoint", "core", "sharding"):
+        import importlib
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

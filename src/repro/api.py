@@ -1,0 +1,32 @@
+"""The stable public API of the reproduction — one import site for the
+strategy-composable session layer:
+
+    from repro.api import Federation, VisionClients, DML
+
+    session = Federation(
+        VisionClients(vn_cfg, train_x, train_y, n_clients=5, rounds=12),
+        DML(kl_weight=1.0, mutual_epochs=1))
+    session.run()
+    session.evaluate(split=(test_x, test_y))
+
+Strategies (what crosses the wire) and populations (who federates, on
+which execution backend) compose freely where the math is defined; a
+population rejects an impossible pairing at construction (e.g. weight
+averaging across heterogeneous pytrees, top-k sharing of Bernoulli
+probabilities).  See docs/API.md for the full protocol and migration
+table from the legacy trainers.
+"""
+from repro.core.api import Federation, History, RoundLog
+from repro.core.populations import (HeteroClients, LMClients, Population,
+                                    VisionClients, make_lm_pool)
+from repro.core.strategies import (DML, STRATEGIES, AsyncWeights, FedAvg,
+                                   Payload, SparseDML, Strategy,
+                                   get_strategy)
+
+__all__ = [
+    "Federation", "History", "RoundLog",
+    "Strategy", "Payload", "STRATEGIES", "get_strategy",
+    "DML", "SparseDML", "FedAvg", "AsyncWeights",
+    "Population", "VisionClients", "HeteroClients", "LMClients",
+    "make_lm_pool",
+]

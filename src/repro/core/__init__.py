@@ -1,10 +1,16 @@
 """The paper's contribution: federated learning via distributed mutual
-learning (loss/prediction sharing), plus the two weight-sharing baselines.
+learning (loss/prediction sharing), plus the two weight-sharing baselines,
+behind one strategy-composable session layer.
 
-- ``mutual``      Eq. 1/2 losses (categorical + Bernoulli)
-- ``federated``   Algorithm 1 engine (VisionNet case study, 3 frameworks)
+- ``api``         ``Federation`` — strategy x population session engine
+- ``strategies``  what crosses the wire: DML / SparseDML / FedAvg / Async
+- ``populations`` who federates: stacked VisionNet / hetero registry / LM
+- ``mutual``      Eq. 1/2 losses (categorical, Bernoulli, sparse top-k)
+- ``federated``   legacy Algorithm-1 trainer (shim over ``Federation``)
+- ``hetero``      legacy heterogeneous trainer (shim over ``Federation``)
 - ``distributed`` mesh-scale client-stacked steps (clients = pod axis)
 - ``fedavg``      vanilla weight-averaging baseline
 - ``async_fl``    asynchronous weight-updating baseline [4]
 """
-from repro.core import async_fl, distributed, fedavg, federated, mutual  # noqa: F401
+from repro.core import (api, async_fl, distributed, fedavg, federated,  # noqa: F401
+                        hetero, mutual, populations, strategies)

@@ -82,8 +82,14 @@ def make_local_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     """Vmapped private-shard CE step.
 
     batch: tokens (K, B, S_tok) [+ prefix (K, B, P, pd)].
+
+    ``part_mask`` (K,) 0/1: absentees' losses are zeroed BEFORE the grad,
+    so their private data contributes nothing — not even through the
+    shared global-norm gradient clip — and their params/opt ride through
+    unchanged (the same pre-grad weighting the fused DML step uses).
     """
-    def step(stacked_params, opt_state, tokens, prefix=None):
+    def step(stacked_params, opt_state, tokens, prefix=None,
+             part_mask=None):
         def total_loss(sp):
             if prefix is None:
                 losses, metrics = _cvmap(spmd_axis_name=spmd_client_axis)(
@@ -93,11 +99,16 @@ def make_local_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                 losses, metrics = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p, t, pe: tfm.loss_fn(p, cfg, t, pe, remat=remat, unroll=unroll)
                 )(sp, tokens, prefix)
-            return jnp.sum(losses), metrics
+            pm = 1.0 if part_mask is None else jnp.asarray(part_mask,
+                                                           jnp.float32)
+            return jnp.sum(losses * pm), metrics
         (_, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(
             stacked_params)
         new_params, new_opt, om = adamw_update(stacked_params, grads,
                                                opt_state, opt_cfg)
+        if part_mask is not None:
+            new_params, new_opt = _mask_participation(
+                stacked_params, opt_state, new_params, new_opt, part_mask)
         return new_params, new_opt, {**metrics, **om}
     return step
 

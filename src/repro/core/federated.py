@@ -1,59 +1,33 @@
-"""Algorithm 1 — the paper's federated loop for the VisionNet case study.
+"""Back-compat shim: the paper's Algorithm-1 trainer as a thin wrapper
+over the unified session API.
 
-Three selectable frameworks under identical conditions (paper §III.B.3:
-same architecture, same per-round data size, same epochs, IID folds):
+The engine itself now lives in two composable pieces:
 
-  - 'fedavg': vanilla FL — full weight averaging every round
-  - 'async' : asynchronous weight-updating FL — metric-weighted average,
-              shallow every round / deep every delta-th round, plus a
-              server-side global model trained on a global fold
-  - 'dml'   : the proposed framework — clients share only predictions on a
-              rotating public fold and descend Eq. 1
-              (BCE + avg KL vs the received, fixed predictions)
+  - ``core.populations.vision.VisionClients`` — the stacked-VisionNet
+    client population and its jitted round programs (vmapped local scan,
+    fused mutual scan, vmapped predict; optionally device-sharded over a
+    ``clients`` mesh),
+  - ``core.strategies`` — what crosses the wire per round (``dml`` /
+    ``fedavg`` / ``async``), each with its comm-bytes formula,
 
-Clients are a *stacked* pytree (leading axis K — ``core.stacking``, the
-same client-axis layout the mesh-scale path shards over pods) and a full
-round executes as a handful of jitted programs instead of O(K · batches)
-Python-dispatched calls:
-
-  _local_scan     vmap over clients of lax.scan over the fixed-shape
-                  (K, T, B) batch plan from ``data.federated``
-  _mutual_scan    all mutual epochs fused: dropout-free share + Eq.-1
-                  descent for all K clients (``mutual.bernoulli_mutual_terms_vs``)
-  _predict_stacked  vmapped inference — sharing, scores, and eval
-
-With a ``clients`` mesh (``FederatedTrainer(..., mesh=...)``) the same two
-training programs run inside ``sharding.shard_map`` over the client axis:
-each device owns whole clients (round-robin spill for K > n_devices via
-``stacking.client_layout``), local training is collective-free, and the
-mutual phase's ONLY cross-device traffic is one all-gather of the public-
-fold predictions per mutual epoch — exactly the bytes
-``comm_bytes_per_round`` simulates.  Results are bitwise-identical to the
-unsharded engine (tests/test_multidevice.py holds this for all 3 methods).
-
-Communication bytes are accounted per round for the bandwidth claim.
+composed by ``core.api.Federation`` (one participation sampler, fold
+discipline, history, comm ledger and checkpoint schema for every
+strategy).  ``FederatedTrainer`` maps the flat ``FederatedConfig`` onto
+that composition and delegates — results are bitwise-identical to the
+pre-API engine (tests/test_api.py), and ``save_state`` files round-trip
+between the shim and ``Federation`` unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro import checkpoint, sharding
 from repro.configs.visionnet import VisionNetConfig
-from repro.core import async_fl, fedavg, stacking
-from repro.core.mutual import _pair_mask, bernoulli_mutual_terms_vs
-from repro.data.federated import (FoldScheduler, NonIIDScheduler,
-                                  round_batch_indices, sample_participants)
-from repro.models.visionnet import (bce_loss, init_visionnet,
-                                    shallow_deep_split, visionnet_forward)
-from repro.optim import SGDConfig, sgd_init, sgd_update
+from repro.core.api import Federation, History, RoundLog  # noqa: F401
+from repro.core.populations.vision import VisionClients
+from repro.core.strategies import DML, AsyncWeights, FedAvg
 
 
 @dataclass
@@ -73,9 +47,7 @@ class FederatedConfig:
     # async
     delta: int = 3
     min_round: int = 5
-    # partial participation: sample M <= K clients per round (0 -> all K);
-    # non-participants are excluded from the Eq.-2 average via masking and
-    # keep their params/opt untouched; comm costs scale with M
+    # partial participation: sample M <= K clients per round (0 -> all K)
     participation: int = 0
     # non-IID client data (paper §VI future work): Dirichlet(alpha) class
     # skew per client; 0 -> IID stratified folds (the paper's setting)
@@ -83,682 +55,96 @@ class FederatedConfig:
     seed: int = 0
     eval_batch: int = 256
 
+    def strategy(self):
+        """The sharing strategy this config names."""
+        if self.method == "dml":
+            return DML(kl_weight=self.kl_weight,
+                       mutual_epochs=self.mutual_epochs)
+        if self.method == "fedavg":
+            return FedAvg()
+        if self.method == "async":
+            return AsyncWeights(delta=self.delta, min_round=self.min_round)
+        raise ValueError(self.method)
 
-@dataclass
-class RoundLog:
-    round: int
-    client_loss: List[float]
-    kl_loss: List[float]
-    comm_bytes: int
-    layer: Optional[str] = None
-    participants: Optional[List[int]] = None      # None -> full participation
-
-
-@dataclass
-class History:
-    rounds: List[RoundLog] = field(default_factory=list)
-    client_test_acc: List[float] = field(default_factory=list)
-    global_test_acc: float = 0.0
-    total_comm_bytes: int = 0
-
-
-# ---------------------------------------------------------------------------
-# jitted programs — each one covers ALL K clients in a single dispatch
-
-
-def _masked_lerp(old, new, w):
-    """Apply ``new`` only where the step is real (w=1); padding keeps old."""
-    return jax.tree.map(lambda a, b: w * b + (1 - w) * a, old, new)
-
-
-def _local_scan_impl(stacked_params, stacked_opt, images, labels, masks,
-                     keys, vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
-                     conv_impl: str = "fused"):
-    """Body of ``_local_scan`` — also the per-device shard_map body of
-    ``_sharded_local_scan`` (per-client work is embarrassingly parallel, so
-    the sharded engine runs this code unchanged on each device's slice).
-
-    K > 1 runs in canonical width-2 client chunks
-    (``stacking.chunked_client_map``) so the per-client arithmetic is
-    bit-identical no matter how many clients this program instance holds;
-    K == 1 (the global model) keeps the plain single-client vmap.
-    """
-
-    def one_client(params, opt, imgs, labs, w, ks):
-        def body(carry, xs):
-            p, o = carry
-            im, la, wi, k = xs
-
-            def loss_fn(q):
-                probs = visionnet_forward(q, vn_cfg, im, train=True,
-                                          dropout_key=k,
-                                          conv_impl=conv_impl)
-                return bce_loss(probs, la)
-
-            loss, grads = jax.value_and_grad(loss_fn)(p)
-            p2, o2, _ = sgd_update(p, grads, o, sgd_cfg)
-            p2 = _masked_lerp(p, p2, wi)
-            o2 = {"vel": _masked_lerp(o["vel"], o2["vel"], wi),
-                  "step": o["step"] + wi.astype(jnp.int32)}
-            return (p2, o2), loss * wi
-
-        (params, opt), losses = jax.lax.scan(body, (params, opt),
-                                             (imgs, labs, w, ks))
-        return params, opt, jnp.sum(losses) / jnp.maximum(jnp.sum(w), 1.0)
-
-    args = (stacked_params, stacked_opt, images, labels, masks, keys)
-    K = jax.tree.leaves(stacked_params)[0].shape[0]
-    if K == 1:
-        return jax.vmap(one_client)(*args)
-    return stacking.chunked_client_map(
-        lambda a, _c: jax.vmap(one_client)(*a), args, K)
-
-
-@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
-                                             "conv_impl"))
-def _local_scan(stacked_params, stacked_opt, images, labels, masks, keys,
-                vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
-                conv_impl: str = "fused"):
-    """Local epochs for all clients: vmap(client) of scan(batch plan).
-
-    images (K,T,B,H,W,C) · labels (K,T,B) · masks (K,T) · keys (K,T,2).
-    Returns (stacked_params, stacked_opt, mean BCE per client (K,)).
-    """
-    return _local_scan_impl(stacked_params, stacked_opt, images, labels,
-                            masks, keys, vn_cfg, sgd_cfg, conv_impl)
-
-
-@functools.lru_cache(maxsize=None)
-def _sharded_local_program(mesh, n_clients: int, vn_cfg: VisionNetConfig,
-                           sgd_cfg: SGDConfig, conv_impl: str):
-    body = functools.partial(_local_scan_impl, vn_cfg=vn_cfg,
-                             sgd_cfg=sgd_cfg, conv_impl=conv_impl)
-    spec = stacking.client_spec()
-    return jax.jit(sharding.shard_map(body, mesh, in_specs=(spec,) * 6,
-                                      out_specs=(spec, spec, spec)))
-
-
-def _sharded_local_scan(stacked_params, stacked_opt, images, labels, masks,
-                        keys, mesh, n_clients: int,
-                        vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
-                        conv_impl: str = "fused"):
-    """``_local_scan`` inside shard_map over the ``clients`` mesh axis.
-
-    Each device trains only the clients it owns (round-robin layout from
-    ``stacking``; K > n_devices spills extra clients as second/third slots)
-    and the phase runs with ZERO cross-device collectives — private data
-    never leaves its device, matching the paper's locality claim.
-
-    The round-robin reorder/pad runs EAGERLY, outside the jitted shard_map
-    program: an in-jit gather feeding shard_map lets XLA's layout
-    assignment propagate non-standard layouts into the per-device body,
-    whose convs/GEMMs then round differently from the unsharded engine.
-    """
-    n_dev = mesh.shape[stacking.CLIENT_AXIS]
-    shard = lambda t: stacking.shard_clients(t, n_clients, n_dev)
-    run = _sharded_local_program(mesh, n_clients, vn_cfg, sgd_cfg,
-                                 conv_impl)
-    p, o, losses = run(shard(stacked_params), shard(stacked_opt),
-                       shard(images), shard(labels), shard(masks),
-                       shard(keys))
-    unshard = lambda t: stacking.unshard_clients(t, n_clients, n_dev)
-    return unshard(p), unshard(o), unshard(losses)
-
-
-def _isolated_epoch(epoch):
-    """Pin a scan body as its own compilation unit.  XLA inlines
-    trip-count-1 loops (mutual_epochs=1 is the default), and an inlined
-    epoch fuses with its surroundings — which differ between the sharded
-    and unsharded engines — breaking their bitwise parity."""
-    def wrapped(carry, xs):
-        carry, xs = jax.lax.optimization_barrier((carry, xs))
-        return jax.lax.optimization_barrier(epoch(carry, xs))
-    return wrapped
-
-
-def _predict_chunked(stacked_params, images, vn_cfg: VisionNetConfig):
-    """Dropout-free stacked forward in canonical client chunks: (K, B)."""
-    K = jax.tree.leaves(stacked_params)[0].shape[0]
-    fn = lambda a, c: jax.vmap(
-        lambda q: visionnet_forward(q, vn_cfg, c[0], train=False))(a[0])
-    return stacking.chunked_client_map(fn, (stacked_params,), K,
-                                       const_args=(images,))
-
-
-def _mutual_epoch_step(stacked_params, stacked_opt, keys_e, pm_rows,
-                       pair_rows, shared, pub_images, pub_labels,
-                       vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
-                       kl_weight: float, conv_impl: str):
-    """One Eq.-1 descent for a stack of clients against FIXED shared
-    predictions.
-
-    ``shared`` (K, B) is the fleet's dropout-free public-fold predictions
-    in natural client order (already stop-gradient'ed: received predictions
-    are data); ``pair_rows`` the matching rows of the Eq.-2 pair mask, and
-    ``pm_rows`` the rows' participation bits.  Runs in canonical width-2
-    chunks, so the unsharded engine (full K rows) and each device of the
-    sharded engine (its K_loc rows) execute bit-identical per-client
-    arithmetic.  Returns (params, opt, (bce, kld)).
-    """
-
-    def chunk(args, const):
-        c_params, c_opt, c_keys, c_pm, c_w = args
-        c_shared, c_imgs, c_labs = const
-
-        def total_loss(cp):
-            live = jax.vmap(
-                lambda q, k: visionnet_forward(q, vn_cfg, c_imgs,
-                                               train=True, dropout_key=k,
-                                               conv_impl=conv_impl)
-            )(cp, c_keys)                                       # (2,B)
-            bce = jax.vmap(lambda pr: bce_loss(pr, c_labs))(live)
-            kld = jnp.mean(bernoulli_mutual_terms_vs(live, c_shared, c_w),
-                           axis=-1)                             # (2,)
-            return (jnp.sum(bce * c_pm) + kl_weight * jnp.sum(kld),
-                    (bce, kld))
-
-        (_, (bce, kld)), grads = jax.value_and_grad(
-            total_loss, has_aux=True)(c_params)
-        # per-client update so grad clipping stays per client, exactly as
-        # in the per-client loop this replaces
-        new_p, new_o, _ = jax.vmap(
-            lambda q, g, o: sgd_update(q, g, o, sgd_cfg))(c_params, grads,
-                                                          c_opt)
-        p = jax.vmap(_masked_lerp)(c_params, new_p, c_pm)
-        o = {"vel": jax.vmap(_masked_lerp)(c_opt["vel"], new_o["vel"],
-                                           c_pm),
-             "step": c_opt["step"] + c_pm.astype(jnp.int32)}
-        return p, o, (bce, kld)
-
-    K = jax.tree.leaves(stacked_params)[0].shape[0]
-    return stacking.chunked_client_map(
-        chunk, (stacked_params, stacked_opt, keys_e, pm_rows, pair_rows), K,
-        const_args=(shared, pub_images, pub_labels))
-
-
-@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
-                                             "kl_weight", "conv_impl"))
-def _mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels, keys,
-                 part_mask, vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
-                 kl_weight: float, conv_impl: str = "fused"):
-    """All mutual epochs for all K clients, fused into one program.
-
-    keys (E, K, 2) · part_mask (K,) 0/1.  Per epoch: every participant
-    shares its dropout-free predictions on the public fold (what actually
-    goes over the wire), then descends Eq. 1 — BCE + kl_weight · KLD vs the
-    received tensor held fixed.  Partial participation masks absentees out
-    of the Eq.-2 average AND out of the update (their params/opt ride
-    through unchanged).  Returns the final epoch's per-client
-    (total loss, bce, kld), each (K,).
-    """
-    K = jax.tree.leaves(stacked_params)[0].shape[0]
-    pair_w = _pair_mask(K, part_mask)
-
-    def epoch(carry, ks):
-        params, opt = carry
-        shared = jax.lax.stop_gradient(
-            _predict_chunked(params, pub_images, vn_cfg))          # (K,B)
-        params, opt, (bce, kld) = _mutual_epoch_step(
-            params, opt, ks, part_mask, pair_w, shared, pub_images,
-            pub_labels, vn_cfg, sgd_cfg, kl_weight, conv_impl)
-        return (params, opt), (bce + kl_weight * kld, bce, kld)
-
-    (stacked_params, stacked_opt), (loss, bce, kld) = jax.lax.scan(
-        _isolated_epoch(epoch), (stacked_params, stacked_opt), keys)
-    return stacked_params, stacked_opt, (loss[-1], bce[-1], kld[-1])
-
-
-@functools.lru_cache(maxsize=None)
-def _sharded_mutual_program(mesh, n_clients: int, vn_cfg: VisionNetConfig,
-                            sgd_cfg: SGDConfig, kl_weight: float,
-                            conv_impl: str):
-    n_dev = mesh.shape[stacking.CLIENT_AXIS]
-
-    def body(params, opt, pub_imgs, pub_labs, ks, pm_full):
-        gids = stacking.local_client_ids(n_clients, n_dev)
-        safe = jnp.minimum(gids, n_clients - 1)
-        real = (gids < n_clients).astype(jnp.float32)    # 0 on dummy slots
-        pm_loc = jnp.take(pm_full, safe) * real
-        pair_rows = jnp.take(_pair_mask(n_clients, pm_full), safe,
-                             axis=0) * real[:, None]
-
-        def epoch(carry, kk):
-            params, opt = carry
-            shared_loc = _predict_chunked(params, pub_imgs,
-                                          vn_cfg)        # (K_loc, B)
-            shared = jax.lax.stop_gradient(stacking.gather_clients(
-                shared_loc, n_clients, n_dev)[:n_clients])  # (K, B) natural
-            params, opt, (bce, kld) = _mutual_epoch_step(
-                params, opt, kk, pm_loc, pair_rows, shared, pub_imgs,
-                pub_labs, vn_cfg, sgd_cfg, kl_weight, conv_impl)
-            return (params, opt), (bce + kl_weight * kld, bce, kld)
-
-        (params, opt), (loss, bce, kld) = jax.lax.scan(
-            _isolated_epoch(epoch), (params, opt), ks)
-        return params, opt, (loss[-1], bce[-1], kld[-1])
-
-    spec = stacking.client_spec()
-    return jax.jit(sharding.shard_map(
-        body, mesh,
-        in_specs=(spec, spec, P(), P(), P(None, stacking.CLIENT_AXIS), P()),
-        out_specs=(spec, spec, (spec, spec, spec))))
-
-
-def _sharded_mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels,
-                         keys, part_mask, mesh, n_clients: int,
-                         vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
-                         kl_weight: float, conv_impl: str = "fused"):
-    """``_mutual_scan`` inside shard_map over the ``clients`` mesh axis.
-
-    Per mutual epoch each device forwards its own clients on the public
-    fold and the (K_loc, B_pub) predictions are all-gathered — the ONLY
-    cross-device collective of the whole round, and precisely the tensor
-    Algorithm 1 says crosses client boundaries.  The gathered fleet is
-    restored to natural client order (``stacking.gather_clients``) before
-    the Eq.-2 sum so reduction order — and hence every float — matches the
-    unsharded engine bitwise.  Each device then descends Eq. 1 for its own
-    clients only (rows of the pair-mask select them); dummies from the
-    round-robin padding are masked out of both the average and the update.
-    The reorder/pad runs eagerly outside the jitted program (see
-    ``_sharded_local_scan`` — in-jit gathers perturb body layouts).
-    """
-    n_dev = mesh.shape[stacking.CLIENT_AXIS]
-    run = _sharded_mutual_program(mesh, n_clients, vn_cfg, sgd_cfg,
-                                  kl_weight, conv_impl)
-    p, o, (loss, bce, kld) = run(
-        stacking.shard_clients(stacked_params, n_clients, n_dev),
-        stacking.shard_clients(stacked_opt, n_clients, n_dev),
-        pub_images, pub_labels,
-        stacking.shard_clients(keys, n_clients, n_dev, axis=1),
-        jnp.asarray(part_mask, jnp.float32))
-    unshard = lambda t: stacking.unshard_clients(t, n_clients, n_dev)
-    return unshard(p), unshard(o), (unshard(loss), unshard(bce),
-                                    unshard(kld))
-
-
-@functools.partial(jax.jit, static_argnames=("vn_cfg",))
-def _predict_stacked(stacked_params, images, vn_cfg: VisionNetConfig):
-    """Vmapped inference on a SHARED batch: (K-stacked params, (B,...)) ->
-    (K, B) probabilities.  The sharing / eval / accuracy path."""
-    return jax.vmap(lambda p: visionnet_forward(p, vn_cfg, images,
-                                                train=False))(stacked_params)
-
-
-@functools.partial(jax.jit, static_argnames=("vn_cfg",))
-def _accuracy_scan(stacked_params, images, labels, masks,
-                   vn_cfg: VisionNetConfig):
-    """Per-client accuracy on per-client (padded) data:
-    images (K,N,H,W,C) · labels (K,N) · masks (K,N) -> (K,)."""
-    probs = jax.vmap(
-        lambda p, im: visionnet_forward(p, vn_cfg, im, train=False)
-    )(stacked_params, images)
-    hit = ((probs > 0.5) == (labels > 0.5)).astype(jnp.float32)
-    return jnp.sum(hit * masks, axis=1) / jnp.maximum(
-        jnp.sum(masks, axis=1), 1.0)
-
-
-# ---------------------------------------------------------------------------
-# engine
 
 class FederatedTrainer:
-    """Runs Algorithm 1 on a (train_images, train_labels) pool.
+    """Legacy facade: ``Federation(VisionClients(...), cfg.strategy())``.
 
     ``mesh``: optional jax Mesh with a ``clients`` axis — the round's two
     training programs then run device-sharded over the client axis
-    (bitwise-identical results; see the sharded program docstrings).
+    (bitwise-identical results; see the population's program docstrings).
     """
 
     def __init__(self, vn_cfg: VisionNetConfig, fed_cfg: FederatedConfig,
                  train_images: np.ndarray, train_labels: np.ndarray,
                  mesh=None):
-        if mesh is not None and stacking.CLIENT_AXIS not in mesh.axis_names:
-            raise ValueError(
-                f"mesh needs a '{stacking.CLIENT_AXIS}' axis, got "
-                f"{mesh.axis_names}")
-        self.mesh = mesh
         self.vn_cfg = vn_cfg
         self.fed = fed_cfg
-        self.images = train_images
-        self.labels = train_labels
-        self.sgd_cfg = SGDConfig(lr=fed_cfg.lr, momentum=fed_cfg.momentum,
-                                 clip_norm=fed_cfg.clip_norm)
-        self.key = jax.random.PRNGKey(fed_cfg.seed)
-        self._plan_seed = fed_cfg.seed * 100_003 + 17
-        # (round, program) pairs — one entry per jitted dispatch, so tests
-        # can assert the engine really is a handful of programs per round
-        self.dispatch_log: List[Tuple[int, str]] = []
-        self._round_idx = -1                      # -1 = init phase
-        # Algorithm 1 line 1: Fold <- (1+Clients) x Rounds + 1
-        if fed_cfg.non_iid_alpha > 0:
-            self.folds = NonIIDScheduler(train_labels, fed_cfg.n_clients,
-                                         fed_cfg.rounds,
-                                         alpha=fed_cfg.non_iid_alpha,
-                                         seed=fed_cfg.seed)
-        else:
-            self.folds = FoldScheduler(train_labels, fed_cfg.n_clients,
-                                       fed_cfg.rounds, seed=fed_cfg.seed)
-        # line 3/6: global model trained on public fold
-        self.key, kg = jax.random.split(self.key)
-        self.global_params = init_visionnet(kg, vn_cfg)
-        self.global_opt = sgd_init(self.global_params)
-        self._train_single(self.folds.pop())
-        # lines 7-8: clients start from G
-        K = fed_cfg.n_clients
-        self.client_params = stacking.broadcast_stack(self.global_params, K)
-        self.client_opts = stacking.stacked_sgd_init(self.client_params)
-        self.n_params = sum(p.size for p in jax.tree.leaves(self.global_params))
-        self.shallow_mask = shallow_deep_split(self.global_params)
-        self.history = History()
-        self._next_round = 0
+        population = VisionClients(
+            vn_cfg, train_images, train_labels,
+            n_clients=fed_cfg.n_clients, rounds=fed_cfg.rounds,
+            local_epochs=fed_cfg.local_epochs,
+            batch_size=fed_cfg.batch_size, lr=fed_cfg.lr,
+            momentum=fed_cfg.momentum, clip_norm=fed_cfg.clip_norm,
+            non_iid_alpha=fed_cfg.non_iid_alpha, seed=fed_cfg.seed,
+            eval_batch=fed_cfg.eval_batch, mesh=mesh)
+        self.session = Federation(population, fed_cfg.strategy(),
+                                  participation=fed_cfg.participation)
 
-    # -- helpers ----------------------------------------------------------
+    # -- state views (everything tests/benchmarks historically reached) ----
+    @property
+    def _pop(self) -> VisionClients:
+        return self.session.population
+
+    @property
+    def history(self) -> History:
+        return self.session.history
+
+    @property
+    def client_params(self):
+        return self._pop.client_params
+
+    @property
+    def client_opts(self):
+        return self._pop.client_opts
+
+    @property
+    def global_params(self):
+        return self._pop.global_params
+
+    @property
+    def global_opt(self):
+        return self._pop.global_opt
+
+    @property
+    def dispatch_log(self):
+        return self._pop.dispatch_log
+
+    @property
+    def folds(self):
+        return self._pop.folds
+
+    @property
+    def mesh(self):
+        return self._pop.mesh
+
+    @property
+    def n_params(self) -> int:
+        return self._pop.n_params
+
     def participants(self, r: int) -> List[int]:
-        """The M clients sampled for round r (stateless in r — resume-safe).
-        Full participation returns all K."""
-        return sample_participants(self.fed.n_clients, self.fed.participation,
-                                   self.fed.seed, r)
+        return self.session.participants(r)
 
-    def _part_mask(self, part: List[int]) -> np.ndarray:
-        mask = np.zeros((self.fed.n_clients,), np.float32)
-        mask[part] = 1.0
-        return mask
-
-    def _next_plan_seed(self) -> int:
-        self._plan_seed += 1
-        return self._plan_seed
-
-    def _split_keys(self, *shape) -> jax.Array:
-        """Dropout keys for a whole program at once: (*shape, 2) uint32."""
-        self.key, sub = jax.random.split(self.key)
-        n = int(np.prod(shape))
-        return jax.random.split(sub, n).reshape(*shape, 2)
-
-    def _gather(self, idx: np.ndarray):
-        return jnp.asarray(self.images[idx]), jnp.asarray(self.labels[idx])
-
-    def _train_single(self, fold: np.ndarray) -> float:
-        """Global-model training = the SAME scan program with K=1."""
-        idx, mask = round_batch_indices([fold], self.fed.local_epochs,
-                                        self.fed.batch_size,
-                                        seed=self._next_plan_seed())
-        if idx.shape[1] == 0:
-            return 0.0
-        imgs, labs = self._gather(idx)
-        keys = self._split_keys(1, idx.shape[1])
-        gp = stacking.expand_stack(self.global_params)
-        go = stacking.expand_stack(self.global_opt)
-        gp, go, losses = _local_scan(gp, go, imgs, labs, jnp.asarray(mask),
-                                     keys, self.vn_cfg, self.sgd_cfg,
-                                     conv_impl="native")
-        self.dispatch_log.append((self._round_idx, "local_scan"))
-        self.global_params = stacking.client_slice(gp, 0)
-        self.global_opt = stacking.client_slice(go, 0)
-        return float(losses[0])
-
-    def _local_round(self, part_mask: Optional[np.ndarray] = None):
-        """Pop K client folds and run every client's local epochs in ONE
-        vmapped scan dispatch.  Returns (folds, per-client mean loss).
-
-        ``part_mask`` (K,) 0/1 zeroes the whole batch plan of absent
-        clients — their params/opt ride through the scan untouched (the
-        masked-lerp padding path), exactly as if they never trained.
-        """
-        K = self.fed.n_clients
-        folds, idx, mask = self.folds.pop_round(
-            K, self.fed.local_epochs, self.fed.batch_size,
-            seed=self._next_plan_seed())
-        if idx.shape[1] == 0:
-            return folds, [0.0] * K
-        if part_mask is not None:
-            mask = mask * part_mask[:, None]
-        imgs, labs = self._gather(idx)
-        keys = self._split_keys(K, idx.shape[1])
-        if self.mesh is not None and K > 1:
-            self._to_mesh()
-            self.client_params, self.client_opts, losses = \
-                _sharded_local_scan(self.client_params, self.client_opts,
-                                    imgs, labs, jnp.asarray(mask), keys,
-                                    self.mesh, K, self.vn_cfg, self.sgd_cfg,
-                                    conv_impl="fused")
-        else:
-            self.client_params, self.client_opts, losses = _local_scan(
-                self.client_params, self.client_opts, imgs, labs,
-                jnp.asarray(mask), keys, self.vn_cfg, self.sgd_cfg,
-                conv_impl="fused" if K > 1 else "native")
-        self.dispatch_log.append((self._round_idx, "local_scan"))
-        return folds, [float(x) for x in np.asarray(losses)]
-
-    def _gather_clients_host(self):
-        """Commit the (possibly client-sharded) client state to one device.
-        The weight-sharing baselines gather every client's weights by
-        definition; doing it explicitly keeps their sync math — reduction
-        order included — bitwise-identical to the unsharded engine."""
-        if self.mesh is None:
-            return
-        dev = jax.devices()[0]
-        self.client_params = jax.device_put(self.client_params, dev)
-        self.client_opts = jax.device_put(self.client_opts, dev)
-
-    def _to_mesh(self):
-        """Re-place single-device-committed client state onto the mesh
-        (after a weight-sharing sync gathered it) so the sharded programs
-        see consistent devices; DML chains keep their sharded placement."""
-        leaf = jax.tree.leaves(self.client_params)[0]
-        if not isinstance(getattr(leaf, "sharding", None),
-                          jax.sharding.SingleDeviceSharding):
-            return
-        sh = jax.sharding.NamedSharding(self.mesh, P())
-        self.client_params = jax.device_put(self.client_params, sh)
-        self.client_opts = jax.device_put(self.client_opts, sh)
-
-    def _fold_accuracies(self, folds) -> List[float]:
-        """Each client scored on its OWN fold — one vmapped dispatch over a
-        padded (K, N) stack (the async baseline's weighting metric)."""
-        n = max(max((len(f) for f in folds), default=0), 1)
-        K = len(folds)
-        idx = np.zeros((K, n), np.int64)
-        mask = np.zeros((K, n), np.float32)
-        for c, f in enumerate(folds):
-            idx[c, :len(f)] = f
-            mask[c, :len(f)] = 1.0
-        imgs, labs = self._gather(idx)
-        acc = _accuracy_scan(self.client_params, imgs, labs,
-                             jnp.asarray(mask), self.vn_cfg)
-        self.dispatch_log.append((self._round_idx, "accuracy_scan"))
-        return [float(a) for a in np.asarray(acc)]
-
-    def _accuracy_chunked(self, stacked_params, images, labels) -> np.ndarray:
-        """All clients' accuracy on a SHARED dataset via the vmapped
-        predict, eval_batch examples at a time.  Returns (K,)."""
-        K = jax.tree.leaves(stacked_params)[0].shape[0]
-        correct = np.zeros((K,), np.int64)
-        for i in range(0, len(images), self.fed.eval_batch):
-            probs = _predict_stacked(stacked_params,
-                                     jnp.asarray(images[i:i + self.fed.eval_batch]),
-                                     self.vn_cfg)
-            self.dispatch_log.append((self._round_idx, "predict"))
-            correct += np.sum((np.asarray(probs) > 0.5) ==
-                              labels[None, i:i + self.fed.eval_batch], axis=1)
-        return correct / len(images)
-
-    # -- rounds -----------------------------------------------------------
+    # -- the session API ----------------------------------------------------
     def run(self, until: int = 0) -> History:
-        """Run rounds up to ``until`` (0 -> cfg.rounds).  Picks up from the
-        round counter, so save_state/restore_state mid-run and a second
-        ``run()`` continue exactly where the checkpoint left off."""
-        stop = until or self.fed.rounds
-        for r in range(self._next_round, min(stop, self.fed.rounds)):
-            self._round_idx = r
-            part = self.participants(r)
-            if self.fed.method == "dml":
-                self._round_dml(r, part)
-            elif self.fed.method == "fedavg":
-                self._round_fedavg(r, part)
-            elif self.fed.method == "async":
-                self._round_async(r, part)
-            else:
-                raise ValueError(self.fed.method)
-            self._next_round = r + 1
-        return self.history
+        return self.session.run(until=until)
 
-    def _log_round(self, r, part, losses, kls, comm, layer=None):
-        full = len(part) == self.fed.n_clients
-        self.history.total_comm_bytes += comm
-        self.history.rounds.append(RoundLog(
-            r, losses, kls, comm, layer=layer,
-            participants=None if full else part))
+    def evaluate(self, test_images: np.ndarray,
+                 test_labels: np.ndarray) -> History:
+        return self.session.evaluate(split=(test_images, test_labels))
 
-    def _round_dml(self, r: int, part: List[int]):
-        K = self.fed.n_clients
-        pm = self._part_mask(part)
-        _, local_losses = self._local_round(pm if len(part) < K else None)
-        # public fold: rotating common test set from the server
-        pub = self.folds.pop()
-        kl_losses = [0.0] * K
-        comm = 0
-        if self.fed.mutual_epochs > 0 and len(part) >= 2:
-            pub_imgs = jnp.asarray(self.images[pub])
-            pub_labs = jnp.asarray(self.labels[pub])
-            keys = self._split_keys(self.fed.mutual_epochs, K)
-            if self.mesh is not None and K > 1:
-                self.client_params, self.client_opts, (loss, _, kld) = \
-                    _sharded_mutual_scan(self.client_params,
-                                         self.client_opts, pub_imgs,
-                                         pub_labs, keys, jnp.asarray(pm),
-                                         self.mesh, K, self.vn_cfg,
-                                         self.sgd_cfg, self.fed.kl_weight,
-                                         conv_impl="fused")
-            else:
-                self.client_params, self.client_opts, (loss, _, kld) = \
-                    _mutual_scan(self.client_params, self.client_opts,
-                                 pub_imgs, pub_labs, keys, jnp.asarray(pm),
-                                 self.vn_cfg, self.sgd_cfg,
-                                 self.fed.kl_weight,
-                                 conv_impl="fused" if K > 1 else "native")
-            self.dispatch_log.append((r, "mutual_scan"))
-            local_losses = [float(x) * m for x, m in
-                            zip(np.asarray(loss), pm)]
-            kl_losses = [float(x) for x in np.asarray(kld)]
-            # inference + sharing: each PARTICIPANT ships (B_pub,)
-            # probabilities up and receives the (M, B_pub) broadcast down,
-            # EVERY epoch — bytes scale with M, not K
-            comm = self.fed.mutual_epochs * 2 * len(part) * len(pub) * 4
-        self._log_round(r, part, local_losses, kl_losses, comm)
-
-    def _round_fedavg(self, r: int, part: List[int]):
-        K = self.fed.n_clients
-        pm = self._part_mask(part)
-        _, losses = self._local_round(pm if len(part) < K else None)
-        self._gather_clients_host()
-        self.folds.pop()                                  # global fold unused
-        if len(part) == K:
-            self.client_params = fedavg.average_weights(self.client_params)
-            avg = self.client_params
-        else:
-            # server averages the M participants; only they receive the
-            # broadcast back (absentees are offline this round)
-            avg = fedavg.weighted_average_weights(self.client_params,
-                                                  jnp.asarray(pm))
-            self.client_params = stacking.client_lerp(self.client_params,
-                                                      avg, pm)
-        self.global_params = stacking.client_slice(avg, 0)
-        comm = fedavg.comm_bytes_per_round(self.n_params, len(part))
-        self._log_round(r, part, losses, [0.0] * K, comm)
-
-    def _round_async(self, r: int, part: List[int]):
-        K = self.fed.n_clients
-        pm = self._part_mask(part)
-        folds, losses = self._local_round(pm if len(part) < K else None)
-        self._gather_clients_host()
-        scores = self._fold_accuracies(folds)
-        # absentees contribute no weight to the aggregate and receive none
-        # of it back (scores masked -> their average weight is 0)
-        masked_scores = jnp.asarray(np.asarray(scores) * pm)
-        synced, layer = async_fl.async_round_update(
-            self.client_params, masked_scores, self.shallow_mask, r,
-            self.fed.delta, self.fed.min_round)
-        # Algorithm 1 lines 17-18: G takes the aggregate then trains on a
-        # fold — sliced from the SYNCED tree (where every client received
-        # the round's average), not from the lerped one below where an
-        # absent client 0 would hand G its stale params
-        self.global_params = stacking.client_slice(synced, 0)
-        if len(part) < K:
-            synced = stacking.client_lerp(self.client_params, synced, pm)
-        self.client_params = synced
-        self._train_single(self.folds.pop())
-        n_sh, n_dp = async_fl.count_params_by_mask(self.global_params,
-                                                   self.shallow_mask)
-        comm = async_fl.comm_bytes_per_round(n_sh, n_dp, len(part), layer)
-        self._log_round(r, part, losses, [0.0] * K, comm, layer=layer)
-
-    # -- checkpoint/resume -------------------------------------------------
     def save_state(self, path: str) -> None:
-        """Full federated state through ``repro.checkpoint``: the
-        client-stacked params + opt, the global model, the PRNG key, and
-        the round counter / fold cursor / plan seed needed to make a
-        resumed run bitwise-identical to an uninterrupted one."""
-        state = {
-            "client_params": self.client_params,
-            "client_opts": self.client_opts,
-            "global_params": self.global_params,
-            "global_opt": self.global_opt,
-            "key": jax.random.key_data(self.key)
-            if jnp.issubdtype(self.key.dtype, jax.dtypes.prng_key)
-            else self.key,
-        }
-        meta = {
-            "engine": "federated",
-            "method": self.fed.method,
-            "n_clients": self.fed.n_clients,
-            "n_rounds": self.fed.rounds,
-            "pool_n": len(self.labels),
-            "round": self._next_round,
-            "plan_seed": self._plan_seed,
-            "scheduler": self.folds.state(),
-            "total_comm_bytes": self.history.total_comm_bytes,
-            "rounds": [dataclasses.asdict(rl) for rl in self.history.rounds],
-        }
-        checkpoint.save(path, state, meta)
+        self.session.save_state(path)
 
     def restore_state(self, path: str) -> None:
-        """Load a ``save_state`` checkpoint into this trainer (must be
-        constructed with the same config and data pool)."""
-        state, meta = checkpoint.restore(path)
-        if meta.get("method") != self.fed.method or \
-                meta.get("n_clients") != self.fed.n_clients:
-            raise ValueError(
-                f"checkpoint ({meta.get('method')}, K={meta.get('n_clients')})"
-                f" != config ({self.fed.method}, K={self.fed.n_clients})")
-        # fold partition is deterministic in (labels, K, rounds, seed); a
-        # different schedule/pool would silently resume on the wrong folds
-        if meta.get("n_rounds", self.fed.rounds) != self.fed.rounds or \
-                meta.get("pool_n", len(self.labels)) != len(self.labels):
-            raise ValueError(
-                f"checkpoint schedule (rounds={meta.get('n_rounds')}, "
-                f"pool={meta.get('pool_n')}) != config "
-                f"(rounds={self.fed.rounds}, pool={len(self.labels)}); "
-                "resume needs the same fold partition — save with the full "
-                "round budget and stop early via run(until=...)")
-        self.client_params = state["client_params"]
-        self.client_opts = state["client_opts"]
-        self.global_params = state["global_params"]
-        self.global_opt = state["global_opt"]
-        self.key = jnp.asarray(state["key"])
-        self._next_round = int(meta["round"])
-        self._plan_seed = int(meta["plan_seed"])
-        self.folds.load_state(meta["scheduler"])
-        self.history = History(
-            rounds=[RoundLog(**d) for d in meta.get("rounds", [])],
-            total_comm_bytes=int(meta.get("total_comm_bytes", 0)))
-
-    # -- final eval (paper Table II / Fig. 3) ------------------------------
-    def evaluate(self, test_images: np.ndarray, test_labels: np.ndarray):
-        self._round_idx = self.fed.rounds                  # eval phase
-        self._gather_clients_host()
-        self.history.client_test_acc = [
-            float(a) for a in self._accuracy_chunked(
-                self.client_params, test_images, test_labels)]
-        gp = stacking.expand_stack(self.global_params)
-        self.history.global_test_acc = float(self._accuracy_chunked(
-            gp, test_images, test_labels)[0])
-        return self.history
+        self.session.restore_state(path)

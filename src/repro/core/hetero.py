@@ -1,49 +1,31 @@
-"""Heterogeneous-client federated mutual learning — the paper's §I
-motivation ("different IoT devices ... might use different architectures")
-as a first-class engine.
+"""Back-compat shim: the heterogeneous-client DML trainer as a thin
+wrapper over the unified session API.
 
-Each client declares its own model family through the per-client registry
-(``models.get_client_model``): dense transformer, attention-free SSM,
-fine-grained MoE, or the paper's VisionNet.  Weight averaging is undefined
-across these clients — the pytrees do not even match — but prediction
-sharing does not care: the ONLY tensor that ever crosses a client boundary
-is the (K, N_pub, V) stack of public-set logits, so the engine works for
-any mix of families that agree on the prediction space V.
-
-Round shape mirrors ``core.federated`` (Algorithm 1):
-
-  1. pop K client folds from the rotating fold schedule (``data.federated``)
-     and run each participant's local epochs (per-client jitted ``lax.scan``
-     over its fixed-shape (T, B) batch plan — clients cannot be vmapped
-     together, but each client is still ONE program per round);
-  2. pop the public fold; every mutual epoch each participant publishes its
-     eval-mode logits and descends Eq. 1 = CE(public) + kl_weight * Eq. 2
-     against the received logits held fixed (``mutual.kl_to_received``);
-  3. account communication: logits up + broadcast down, scaling with the
-     number of PARTICIPANTS (partial participation: M <= K per round).
-
-Scenario knobs shared with the homogeneous engines:
-  - partial participation (``participation``: sample M <= K per round;
-    non-participants train nothing, share nothing, receive nothing);
-  - checkpoint/resume of the full federated state (per-client params +
-    opt + round counter) through ``repro.checkpoint``.
+The engine now lives in ``core.populations.hetero.HeteroClients`` (the
+per-client model registry, per-arch jitted programs, fold discipline)
+composed with a ``core.strategies`` sharing strategy by
+``core.api.Federation``.  ``HeteroTrainer`` keeps the original
+constructor/`run`/`evaluate()`/checkpoint surface and reproduces the
+pre-API engine bitwise; its ``save_state`` files restore into a
+``Federation`` unchanged.  ``make_lm_pool`` and ``comm_bytes_per_round``
+re-export from the population module.
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint
-from repro.core.mutual import kl_to_received
-from repro.data.federated import (FoldScheduler, round_batch_indices,
-                                  sample_participants)
-from repro.data.synthetic import make_token_stream
-from repro.models import ClientModel, get_client_model
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.core.api import Federation, History, RoundLog
+from repro.core.populations.hetero import (HeteroClients,
+                                           comm_bytes_per_round,
+                                           make_lm_pool)  # noqa: F401
+from repro.core.strategies import DML, SparseDML
+
+# legacy names (the hetero engine predates the unified History)
+HeteroHistory = History
+HeteroRoundLog = RoundLog
 
 
 @dataclass
@@ -57,287 +39,92 @@ class HeteroConfig:
     kl_weight: float = 1.0
     mutual_epochs: int = 1
     participation: int = 0        # M <= K clients sampled per round; 0 -> K
+    sparse_k: int = 0             # > 0: share top-k predictions (SparseDML)
     seed: int = 0
 
     @property
     def n_clients(self) -> int:
         return len(self.archs)
 
-
-@dataclass
-class HeteroRoundLog:
-    round: int
-    participants: List[int]
-    client_loss: List[float]      # local-phase mean loss (0 for absentees)
-    public_ce: List[float]        # Eq.-1 model loss on the public fold
-    kl_loss: List[float]          # Eq.-2 term (0 for absentees)
-    comm_bytes: int
-
-
-@dataclass
-class HeteroHistory:
-    rounds: List[HeteroRoundLog] = field(default_factory=list)
-    client_eval_loss: List[float] = field(default_factory=list)
-    total_comm_bytes: int = 0
-
-
-def comm_bytes_per_round(n_participants: int, n_pub: int, n_classes: int,
-                         mutual_epochs: int,
-                         bytes_per_el: int = 4) -> Dict[str, int]:
-    """Cost-accounting dict for one heterogeneous DML round.
-
-    Every mutual epoch each of the M participants ships its (N_pub, V)
-    logits up and receives the (M, N_pub, V) broadcast down — the same
-    up+down convention as the homogeneous engine, with bytes independent
-    of any model's parameter count (the paper's bandwidth claim; weight
-    averaging is not even defined here).
-    """
-    per_epoch = n_participants * n_pub * n_classes * bytes_per_el
-    return {"per_epoch_up": per_epoch, "per_epoch_down": per_epoch,
-            "round": mutual_epochs * 2 * per_epoch}
-
-
-def make_lm_pool(n_seqs: int, seq_len: int, vocab: int, seed: int = 0,
-                 n_domains: int = 4) -> Tuple[np.ndarray, np.ndarray]:
-    """Token pool + domain labels for the fold schedule.
-
-    Rows come from ``n_domains`` bigram rules; the domain id doubles as the
-    stratification label so every fold mixes all domains (the IID setting).
-    """
-    per = -(-n_seqs // n_domains)
-    parts = [make_token_stream(per, seq_len, vocab, seed=seed + d, domain=d)
-             for d in range(n_domains)]
-    data = np.concatenate(parts)[:n_seqs]
-    labels = np.repeat(np.arange(n_domains), per)[:n_seqs]
-    return data, labels.astype(np.int64)
+    def strategy(self):
+        if self.sparse_k:
+            return SparseDML(k=self.sparse_k, kl_weight=self.kl_weight,
+                             mutual_epochs=self.mutual_epochs)
+        return DML(kl_weight=self.kl_weight,
+                   mutual_epochs=self.mutual_epochs)
 
 
 class HeteroTrainer:
-    """Runs the Algorithm-1 round loop over architecture-heterogeneous
-    clients on a (data, labels) pool.
-
-    ``data``: (N, ...) examples — token streams (N, S) for 'lm' clients,
-    images (N, H, W, C) for 'vision' clients.  ``labels``: (N,) ints used
-    for stratified folds (and as targets for 'vision' clients).
-    """
+    """Legacy facade: ``Federation(HeteroClients(...), cfg.strategy())``."""
 
     def __init__(self, cfg: HeteroConfig, data: np.ndarray,
                  labels: np.ndarray, reduced: bool = True):
         self.cfg = cfg
-        self.data = data
-        self.labels = labels
-        # one ClientModel per unique arch so duplicate-arch clients share
-        # jit caches; one params/opt pytree per client
-        self._models: Dict[str, ClientModel] = {
-            a: get_client_model(a, reduced=reduced) for a in set(cfg.archs)}
-        kinds = {m.kind for m in self._models.values()}
-        if len(kinds) != 1:
-            raise ValueError(f"clients mix modalities {sorted(kinds)}; a "
-                             "federation needs one public-set modality")
-        spaces = {m.n_classes for m in self._models.values()}
-        if len(spaces) != 1:
-            raise ValueError(f"clients disagree on the prediction space V "
-                             f"({sorted(spaces)}); shared vocab required")
-        self.n_classes = spaces.pop()
-        self.opt_cfg = AdamWConfig(
-            lr=cfg.lr, warmup=2,
-            total_steps=max(cfg.rounds * (cfg.local_epochs + cfg.mutual_epochs),
-                            1))
-        self.base_key = jax.random.PRNGKey(cfg.seed)
-        keys = jax.random.split(jax.random.fold_in(self.base_key, 0xC11E47),
-                                cfg.n_clients)
-        self.client_params = [self._models[a].init(k)
-                              for a, k in zip(cfg.archs, keys)]
-        self.client_opts = [adamw_init(p) for p in self.client_params]
-        self.n_params = [sum(np.size(x) for x in jax.tree.leaves(p))
-                         for p in self.client_params]
-        # Algorithm-1 fold discipline; the init fold (the homogeneous
-        # engine's global-model fold — there is no global model here)
-        # becomes a common held-out eval fold
-        self.folds = FoldScheduler(labels, cfg.n_clients, cfg.rounds,
-                                   seed=cfg.seed)
-        min_fold = len(labels) // self.folds.n_folds
-        self._pub_n = max(1, min(cfg.public_batch, min_fold))
-        self._local_T = cfg.local_epochs * max(1, min_fold // cfg.batch_size)
-        self.eval_fold = self.folds.pop()[:max(self._pub_n, 1)]
-        self._progs: Dict[str, Dict] = {}
-        self._round = 0
-        self._plan_seed = cfg.seed * 100_003 + 29
-        self.history = HeteroHistory()
+        population = HeteroClients(
+            cfg.archs, data, labels, rounds=cfg.rounds,
+            local_epochs=cfg.local_epochs, batch_size=cfg.batch_size,
+            public_batch=cfg.public_batch, lr=cfg.lr, seed=cfg.seed,
+            mutual_updates_per_round=cfg.mutual_epochs, reduced=reduced)
+        self.session = Federation(population, cfg.strategy(),
+                                  participation=cfg.participation)
 
-    # -- per-arch jitted programs -----------------------------------------
-    def _prog(self, arch: str) -> Dict:
-        if arch in self._progs:
-            return self._progs[arch]
-        cm = self._models[arch]
-        opt_cfg = self.opt_cfg
-        kl_w = self.cfg.kl_weight
+    # -- state views --------------------------------------------------------
+    @property
+    def _pop(self) -> HeteroClients:
+        return self.session.population
 
-        @jax.jit
-        def local_scan(params, opt, inputs, labs, keys):
-            """One client's whole local phase: scan over its (T, B) plan."""
-            def body(carry, xs):
-                p, o = carry
-                inp, la, k = xs
-                loss, grads = jax.value_and_grad(
-                    lambda q: cm.private_loss(q, inp, la, k))(p)
-                p2, o2, _ = adamw_update(p, grads, o, opt_cfg)
-                return (p2, o2), loss
-            (params, opt), losses = jax.lax.scan(body, (params, opt),
-                                                 (inputs, labs, keys))
-            return params, opt, jnp.mean(losses)
+    @property
+    def history(self) -> History:
+        return self.session.history
 
-        @jax.jit
-        def mutual_step(params, opt, inputs, labs, others_logits, key):
-            """Eq. 1 with the received logits fixed (one mutual epoch)."""
-            def loss_fn(p):
-                ce, live = cm.public_ce_and_logits(p, inputs, labs, key)
-                kl = jnp.mean(kl_to_received(live, others_logits))
-                return ce + kl_w * kl, (ce, kl)
-            (_, (ce, kl)), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params)
-            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
-            return params, opt, ce, kl
+    @property
+    def client_params(self):
+        return self._pop.client_params
 
-        share = jax.jit(cm.share_logits)
-        eval_ce = jax.jit(
-            lambda p, x, y: cm.public_ce_and_logits(p, x, y, None)[0])
-        self._progs[arch] = {"local": local_scan, "mutual": mutual_step,
-                             "share": share, "eval_ce": eval_ce}
-        return self._progs[arch]
+    @client_params.setter
+    def client_params(self, value):
+        self._pop.client_params = value
 
-    # -- helpers ----------------------------------------------------------
-    def _round_key(self, r: int) -> jax.Array:
-        return jax.random.fold_in(self.base_key, r)
+    @property
+    def client_opts(self):
+        return self._pop.client_opts
+
+    @property
+    def n_params(self) -> List[int]:
+        return self._pop.n_params
+
+    @property
+    def n_classes(self) -> int:
+        return self._pop.n_classes
+
+    @property
+    def folds(self):
+        return self._pop.folds
+
+    @property
+    def eval_fold(self):
+        return self._pop.eval_fold
+
+    @property
+    def _models(self):
+        return self._pop._models
+
+    @property
+    def _round(self) -> int:
+        return self.session.round
 
     def participants(self, r: int) -> List[int]:
-        """The M clients sampled for round r (stateless in r — resume-safe)."""
-        return sample_participants(self.cfg.n_clients, self.cfg.participation,
-                                   self.cfg.seed, r)
+        return self.session.participants(r)
 
-    def _gather(self, idx: np.ndarray):
-        return jnp.asarray(self.data[idx]), jnp.asarray(self.labels[idx])
+    # -- the session API ----------------------------------------------------
+    def run(self, until: int = 0) -> History:
+        return self.session.run(until=until)
 
-    # -- rounds -----------------------------------------------------------
-    def run(self, until: int = 0) -> HeteroHistory:
-        """Run rounds up to ``until`` (0 -> cfg.rounds).  Picks up from the
-        current round counter, so save_state/restore_state mid-run and a
-        second ``run()`` continue exactly where the checkpoint left off."""
-        stop = until or self.cfg.rounds
-        for r in range(self._round, min(stop, self.cfg.rounds)):
-            self._run_round(r)
-        return self.history
+    def evaluate(self) -> History:
+        return self.session.evaluate(split=None)
 
-    def _run_round(self, r: int):
-        cfg = self.cfg
-        K = cfg.n_clients
-        part = self.participants(r)
-        key_r = self._round_key(r)
-        self._plan_seed += 1
-        # 1) local phase — K folds popped in Algorithm-1 order regardless of
-        # participation (the fold budget is part of the protocol); the
-        # absentees' folds go unused this round
-        folds = [self.folds.pop() for _ in range(K)]
-        local_losses = [0.0] * K
-        for c in part:
-            idx, _ = round_batch_indices([folds[c]], cfg.local_epochs,
-                                         cfg.batch_size,
-                                         seed=self._plan_seed * K + c)
-            idx = idx[0, :self._local_T]            # fixed T: stable jit cache
-            if idx.shape[0] == 0:
-                continue
-            inputs, labs = self._gather(idx)
-            keys = jax.random.split(jax.random.fold_in(key_r, 100 + c),
-                                    idx.shape[0])
-            prog = self._prog(cfg.archs[c])
-            self.client_params[c], self.client_opts[c], loss = prog["local"](
-                self.client_params[c], self.client_opts[c], inputs, labs, keys)
-            local_losses[c] = float(loss)
-        # 2) mutual phase on the rotating public fold
-        pub = self.folds.pop()[:self._pub_n]
-        pub_inputs, pub_labs = self._gather(pub)
-        public_ce = [0.0] * K
-        kl_losses = [0.0] * K
-        comm = 0
-        if cfg.mutual_epochs > 0 and len(part) >= 2:
-            n_pub = None
-            for e in range(cfg.mutual_epochs):
-                # every participant publishes; ONLY these logits cross
-                # client boundaries
-                shared = [np.asarray(self._prog(cfg.archs[c])["share"](
-                    self.client_params[c], pub_inputs)) for c in part]
-                stack = np.stack(shared)            # (M, N_pub, V)
-                n_pub = stack.shape[1]
-                for s, c in enumerate(part):
-                    others = jnp.asarray(np.delete(stack, s, axis=0))
-                    k = jax.random.fold_in(key_r, 1000 + e * K + c)
-                    prog = self._prog(cfg.archs[c])
-                    (self.client_params[c], self.client_opts[c],
-                     ce, kl) = prog["mutual"](
-                        self.client_params[c], self.client_opts[c],
-                        pub_inputs, pub_labs, others, k)
-                    public_ce[c] = float(ce)
-                    kl_losses[c] = float(kl)
-            comm = comm_bytes_per_round(len(part), n_pub, self.n_classes,
-                                        cfg.mutual_epochs)["round"]
-        self.history.total_comm_bytes += comm
-        self.history.rounds.append(HeteroRoundLog(
-            r, part, local_losses, public_ce, kl_losses, comm))
-        self._round = r + 1
-
-    # -- eval -------------------------------------------------------------
-    def evaluate(self) -> HeteroHistory:
-        """Per-client model loss on the common held-out fold (comparable
-        across families — it is the same public-style CE every client
-        optimises in Eq. 1)."""
-        inputs, labs = self._gather(self.eval_fold)
-        self.history.client_eval_loss = [
-            float(self._prog(a)["eval_ce"](p, inputs, labs))
-            for a, p in zip(self.cfg.archs, self.client_params)]
-        return self.history
-
-    # -- checkpoint/resume ------------------------------------------------
     def save_state(self, path: str) -> None:
-        """Full federated state: per-client params + opt + round counter."""
-        state = {"clients": [{"params": p, "opt": o} for p, o in
-                             zip(self.client_params, self.client_opts)]}
-        meta = {
-            "engine": "hetero",
-            "archs": list(self.cfg.archs),
-            "n_rounds": self.cfg.rounds,
-            "pool_n": len(self.labels),
-            "round": self._round,
-            "plan_seed": self._plan_seed,
-            "scheduler": self.folds.state(),
-            "total_comm_bytes": self.history.total_comm_bytes,
-            "rounds": [asdict(rl) for rl in self.history.rounds],
-        }
-        checkpoint.save(path, state, meta)
+        self.session.save_state(path)
 
     def restore_state(self, path: str) -> None:
-        """Load a ``save_state`` checkpoint into this trainer (must be
-        constructed with the same config and data pool)."""
-        state, meta = checkpoint.restore(path)
-        if meta.get("archs") != list(self.cfg.archs):
-            raise ValueError(f"checkpoint archs {meta.get('archs')} != "
-                             f"config archs {list(self.cfg.archs)}")
-        # the fold PARTITION is deterministic in (labels, K, rounds, seed):
-        # a different round schedule or pool silently re-partitions the
-        # data, so the restored cursor would index folds the checkpointed
-        # run never saw — refuse instead of resuming on the wrong folds
-        if meta.get("n_rounds", self.cfg.rounds) != self.cfg.rounds or \
-                meta.get("pool_n", len(self.labels)) != len(self.labels):
-            raise ValueError(
-                f"checkpoint schedule (rounds={meta.get('n_rounds')}, "
-                f"pool={meta.get('pool_n')}) != config "
-                f"(rounds={self.cfg.rounds}, pool={len(self.labels)}); "
-                "resume needs the same fold partition — save with the full "
-                "round budget and stop early via run(until=...)")
-        self.client_params = [c["params"] for c in state["clients"]]
-        self.client_opts = [c["opt"] for c in state["clients"]]
-        self._round = int(meta["round"])
-        self._plan_seed = int(meta["plan_seed"])
-        self.folds.load_state(meta["scheduler"])
-        self.history = HeteroHistory(
-            rounds=[HeteroRoundLog(**d) for d in meta.get("rounds", [])],
-            total_comm_bytes=int(meta.get("total_comm_bytes", 0)))
+        self.session.restore_state(path)

@@ -224,6 +224,42 @@ def sparse_mutual_kl_loss(live_logits, idx, logp_top,
     return jnp.mean(terms, axis=-1)
 
 
+def sparse_kl_to_received(live_logits, idx, logp_top,
+                          temperature: float = 1.0):
+    """Eq. 2 for ONE client against RECEIVED sparse (top-k) predictions.
+
+    live_logits: (B, V) — local, differentiable.
+    idx, logp_top: (J, B, k) — the J other participants' top-k sets
+    (treated as constants; stop_gradient applied here).
+
+    Same tail model as ``sparse_mutual_kl_loss`` (~P_j = top-k mass +
+    uniform residual over the V-k tail):
+        KL_j = -H(P_i) - c_j (1 - s_j) - sum_t p_i[idx_j,t] logp_j[t]
+    with s_j = sum_t p_i[idx_j,t] and c_j = log(residual_j / (V - k)).
+    Returns (B,) = 1/J * sum_j KL_j — the per-client form the
+    heterogeneous engine descends (clients with different pytrees cannot
+    be stacked, so each computes Eq. 2 against the sparse sets that
+    actually crossed the client boundary).
+    """
+    J, B, k = idx.shape
+    V = live_logits.shape[-1]
+    idx = jax.lax.stop_gradient(idx)
+    logp_top = jax.lax.stop_gradient(logp_top.astype(jnp.float32))
+    lp_live = jax.nn.log_softmax(
+        live_logits.astype(jnp.float32) / temperature, axis=-1)
+    p_live = jnp.exp(lp_live)                            # (B,V)
+    neg_h = jnp.sum(p_live * lp_live, axis=-1)           # (B,)
+    residual = jnp.clip(1.0 - jnp.sum(jnp.exp(logp_top), axis=-1),
+                        1e-9, 1.0)                       # (J,B)
+    c = jnp.log(residual / max(V - k, 1))                # (J,B)
+    p_at = jax.vmap(
+        lambda ij: jnp.take_along_axis(p_live, ij, axis=-1))(idx)  # (J,B,k)
+    s = jnp.sum(p_at, axis=-1)                           # (J,B)
+    cross_top = jnp.sum(p_at * logp_top, axis=-1)        # (J,B)
+    kl = neg_h[None] - c * (1.0 - s) - cross_top         # (J,B)
+    return jnp.sum(kl, axis=0) / max(J, 1)
+
+
 def sparse_share_bytes(n_clients: int, n_examples: int, k: int) -> int:
     """Per-round traffic of top-k sharing (int32 idx + fp32 logp, up+down)."""
     return 2 * n_clients * n_examples * k * 8

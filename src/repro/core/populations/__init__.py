@@ -1,0 +1,21 @@
+"""Client populations for ``repro.api.Federation`` — who federates and
+on what execution backend:
+
+- :class:`VisionClients`  the paper's stacked VisionNet fleet (Algorithm 1;
+                          single-device vmap or a ``clients`` mesh)
+- :class:`HeteroClients`  architecture-heterogeneous clients via the
+                          per-client model registry
+- :class:`LMClients`      LLM-scale stacked clients over the
+                          ``core.distributed`` fused step factories
+
+``Population`` documents the capability surface strategies drive.
+"""
+from repro.core.populations.base import Population
+from repro.core.populations.hetero import (HeteroClients,
+                                           comm_bytes_per_round,
+                                           make_lm_pool)
+from repro.core.populations.lm import LMClients
+from repro.core.populations.vision import VisionClients
+
+__all__ = ["Population", "VisionClients", "HeteroClients", "LMClients",
+           "comm_bytes_per_round", "make_lm_pool"]

@@ -1,0 +1,107 @@
+"""Shared surface of the client populations a ``Federation`` can run.
+
+A population owns everything *model-side* of the protocol: the client
+parameters/optimizers, the data + fold schedule, the jitted programs,
+and the execution backend (single-device vmap vs a ``clients`` mesh).
+Strategies (``core.strategies``) drive it through the capability methods
+below; a population advertises which strategies it can execute via
+``supported`` and may veto specific pairings in ``validate_strategy``
+(e.g. weight averaging across heterogeneous pytrees).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+class Population:
+    """Capability/constants surface; concrete populations override."""
+
+    engine_name: str = "population"          # checkpoint meta "engine" tag
+    supported: frozenset = frozenset()
+    fused_dml: bool = False                  # local+mutual in one program?
+    log_participants_always: bool = False    # hetero convention: log the
+    #                                          list even at M == K
+    bytes_per_position: int = 4              # payload bytes per shared
+    #                                          prediction position
+    n_clients: int = 0
+    rounds: int = 0
+    seed: int = 0
+
+    # -- session plumbing --------------------------------------------------
+    def validate_strategy(self, strategy) -> None:
+        if strategy.name not in self.supported:
+            raise ValueError(
+                f"{type(self).__name__} does not support strategy "
+                f"{strategy.name!r} (supported: {sorted(self.supported)})")
+
+    def begin_round(self, r: int) -> None:
+        """Called by the session before each round (dispatch-log phase)."""
+
+    def part_mask(self, part: List[int]) -> np.ndarray:
+        mask = np.zeros((self.n_clients,), np.float32)
+        mask[part] = 1.0
+        return mask
+
+    # -- capabilities (strategy-facing; optional per population) ----------
+    def local_phase(self, r: int, part: List[int], pm) -> List[float]:
+        raise NotImplementedError
+
+    def public_payload(self, r: int):
+        """Pop/materialise the round's shared public fold."""
+        raise NotImplementedError
+
+    def weights_payload(self, r: int):
+        """Weight strategies keep the Algorithm-1 fold budget: the shared
+        fold is still popped every round (FedAvg discards it; async trains
+        the global model on it), so checkpoints stay schedule-compatible
+        across strategies."""
+        return None
+
+    def mutual_phase(self, r, part, pm, payload, kl_weight, mutual_epochs,
+                     sparse_k: int = 0) -> dict:
+        raise NotImplementedError
+
+    def fedavg_combine(self, part: List[int], pm) -> None:
+        raise NotImplementedError
+
+    def async_combine(self, r, part, pm, delta, min_round, pub) -> str:
+        raise NotImplementedError
+
+    def async_param_counts(self):
+        raise NotImplementedError
+
+    @property
+    def params_per_client(self) -> int:
+        raise NotImplementedError
+
+    # -- evaluation / checkpoint ------------------------------------------
+    def evaluate(self, history, split=None):
+        raise NotImplementedError
+
+    def state_dict(self) -> dict:
+        raise NotImplementedError
+
+    def meta_dict(self) -> dict:
+        raise NotImplementedError
+
+    def check_meta(self, meta: dict) -> None:
+        """Refuse checkpoints whose schedule/population don't match."""
+
+    def load_state_dict(self, state: dict, meta: dict) -> None:
+        raise NotImplementedError
+
+
+def broadcast_mask_counts(stacked_params, mask_tree, n_clients: int):
+    """(n_in_mask, n_outside_mask) per client for broadcast-shaped float
+    mask trees (e.g. ``distributed.transformer_shallow_mask``, whose
+    leaves are (1, ...) selectors broadcast against the param leaves)."""
+    n_in = n_out = 0.0
+    import jax
+    for p, m in zip(jax.tree.leaves(stacked_params),
+                    jax.tree.leaves(mask_tree)):
+        m = np.broadcast_to(np.asarray(m, np.float32), p.shape)
+        n_in += float(m.sum())
+        n_out += float((1.0 - m).sum())
+    return int(round(n_in / n_clients)), int(round(n_out / n_clients))

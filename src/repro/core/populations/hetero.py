@@ -1,0 +1,441 @@
+"""Heterogeneous-client population — the paper's §I motivation
+("different IoT devices ... might use different architectures") as a
+``Federation`` population.
+
+Each client declares its own model family through the per-client registry
+(``models.get_client_model``): dense transformer, attention-free SSM,
+fine-grained MoE, or the paper's VisionNet.  Weight averaging is undefined
+across these clients — the pytrees do not even match — but prediction
+sharing does not care: the ONLY tensor that ever crosses a client boundary
+is the (K, N_pub, V) stack of public-set logits (dense DML) or its top-k
+compression (SparseDML), so the population works for any mix of families
+that agree on the prediction space V.
+
+Per round each participant runs its local epochs as ONE jitted
+``lax.scan`` program over its fixed-shape (T, B) batch plan (clients
+cannot be vmapped together — their pytrees differ — but each client is
+still one program per round), then the mutual phase descends Eq. 1
+against the received predictions (``mutual.kl_to_received`` /
+``mutual.sparse_kl_to_received``).
+
+Weight strategies (``fedavg`` / ``async``) are accepted ONLY when every
+client declares the same arch (identical pytrees — the degenerate case
+where averaging is defined again); mixed fleets reject them at session
+construction, which is the paper's point made executable.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stacking
+from repro.core.async_fl import layer_schedule
+from repro.core.fedavg import average_weights, weighted_average_weights
+from repro.core.mutual import (kl_to_received, sparse_kl_to_received,
+                               topk_predictions)
+from repro.core.populations.base import Population, broadcast_mask_counts
+from repro.data.federated import FoldScheduler, round_batch_indices
+from repro.data.synthetic import make_token_stream
+from repro.models import ClientModel, get_client_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def comm_bytes_per_round(n_participants: int, n_pub: int, n_classes: int,
+                         mutual_epochs: int,
+                         bytes_per_el: int = 4) -> Dict[str, int]:
+    """Cost-accounting dict for one heterogeneous DML round.
+
+    Every mutual epoch each of the M participants ships its (N_pub, V)
+    logits up and receives the (M, N_pub, V) broadcast down — the same
+    up+down convention as the homogeneous engine, with bytes independent
+    of any model's parameter count (the paper's bandwidth claim; weight
+    averaging is not even defined here).
+    """
+    per_epoch = n_participants * n_pub * n_classes * bytes_per_el
+    return {"per_epoch_up": per_epoch, "per_epoch_down": per_epoch,
+            "round": mutual_epochs * 2 * per_epoch}
+
+
+def make_lm_pool(n_seqs: int, seq_len: int, vocab: int, seed: int = 0,
+                 n_domains: int = 4) -> Tuple[np.ndarray, np.ndarray]:
+    """Token pool + domain labels for the fold schedule.
+
+    Rows come from ``n_domains`` bigram rules; the domain id doubles as the
+    stratification label so every fold mixes all domains (the IID setting).
+    """
+    per = -(-n_seqs // n_domains)
+    parts = [make_token_stream(per, seq_len, vocab, seed=seed + d, domain=d)
+             for d in range(n_domains)]
+    data = np.concatenate(parts)[:n_seqs]
+    labels = np.repeat(np.arange(n_domains), per)[:n_seqs]
+    return data, labels.astype(np.int64)
+
+
+class HeteroClients(Population):
+    """Architecture-heterogeneous clients on a (data, labels) pool.
+
+    ``data``: (N, ...) examples — token streams (N, S) for 'lm' clients,
+    images (N, H, W, C) for 'vision' clients.  ``labels``: (N,) ints used
+    for stratified folds (and as targets for 'vision' clients).
+    """
+
+    engine_name = "hetero"
+    supported = frozenset({"dml", "sparse-dml", "fedavg", "async"})
+    log_participants_always = True
+
+    def __init__(self, archs: Tuple[str, ...], data: np.ndarray,
+                 labels: np.ndarray, rounds: int = 4,
+                 local_epochs: int = 1, batch_size: int = 4,
+                 public_batch: int = 4, lr: float = 3e-3, seed: int = 0,
+                 mutual_updates_per_round: int = 1, reduced: bool = True):
+        self.archs = tuple(archs)
+        self.data = data
+        self.labels = labels
+        self.n_clients = len(self.archs)
+        self.rounds = rounds
+        self.local_epochs = local_epochs
+        self.batch_size = batch_size
+        self.seed = seed
+        # one ClientModel per unique arch so duplicate-arch clients share
+        # jit caches; one params/opt pytree per client
+        self._models: Dict[str, ClientModel] = {
+            a: get_client_model(a, reduced=reduced) for a in set(self.archs)}
+        kinds = {m.kind for m in self._models.values()}
+        if len(kinds) != 1:
+            raise ValueError(f"clients mix modalities {sorted(kinds)}; a "
+                             "federation needs one public-set modality")
+        self.kind = kinds.pop()
+        spaces = {m.n_classes for m in self._models.values()}
+        if len(spaces) != 1:
+            raise ValueError(f"clients disagree on the prediction space V "
+                             f"({sorted(spaces)}); shared vocab required")
+        self.n_classes = spaces.pop()
+        self.opt_cfg = AdamWConfig(
+            lr=lr, warmup=2,
+            total_steps=max(rounds * (local_epochs
+                                      + mutual_updates_per_round), 1))
+        self.base_key = jax.random.PRNGKey(seed)
+        keys = jax.random.split(jax.random.fold_in(self.base_key, 0xC11E47),
+                                self.n_clients)
+        self.client_params = [self._models[a].init(k)
+                              for a, k in zip(self.archs, keys)]
+        self.client_opts = [adamw_init(p) for p in self.client_params]
+        self.n_params = [sum(np.size(x) for x in jax.tree.leaves(p))
+                         for p in self.client_params]
+        # Algorithm-1 fold discipline; the init fold (the homogeneous
+        # engine's global-model fold — there is no global model here)
+        # becomes a common held-out eval fold
+        self.folds = FoldScheduler(labels, self.n_clients, rounds,
+                                   seed=seed)
+        min_fold = len(labels) // self.folds.n_folds
+        self._pub_n = max(1, min(public_batch, min_fold))
+        self._local_T = local_epochs * max(1, min_fold // batch_size)
+        self.eval_fold = self.folds.pop()[:max(self._pub_n, 1)]
+        self._progs: Dict = {}
+        self._plan_seed = seed * 100_003 + 29
+        self._last_local_losses: List[float] = [0.0] * self.n_clients
+
+    def validate_strategy(self, strategy) -> None:
+        super().validate_strategy(strategy)
+        if strategy.name in ("fedavg", "async") and \
+                len(set(self.archs)) > 1:
+            raise ValueError(
+                f"strategy {strategy.name!r} shares weights, which is "
+                f"undefined across heterogeneous clients (archs "
+                f"{sorted(set(self.archs))} have different pytrees).  Use "
+                "prediction sharing (dml / sparse-dml), or a fleet of one "
+                "arch.")
+        if strategy.name == "async" and self.kind != "lm":
+            raise ValueError(
+                "the async shallow/deep schedule on this population uses "
+                "the transformer layer split; non-'lm' fleets "
+                f"(kind={self.kind!r}) should use the VisionClients "
+                "population for AsyncWeights")
+
+    # -- per-arch jitted programs -----------------------------------------
+    # kl-INDEPENDENT programs (local scan, sharing, eval) cache per arch;
+    # only the Eq.-1 descent closes over kl_weight (and k for sparse) and
+    # caches per (arch, kl_weight[, k]) — duplicate-arch clients and
+    # different strategies share every program they legally can.
+    def _prog(self, arch: str) -> Dict:
+        if arch in self._progs:
+            return self._progs[arch]
+        cm = self._models[arch]
+        opt_cfg = self.opt_cfg
+
+        @jax.jit
+        def local_scan(params, opt, inputs, labs, keys):
+            """One client's whole local phase: scan over its (T, B) plan."""
+            def body(carry, xs):
+                p, o = carry
+                inp, la, k = xs
+                loss, grads = jax.value_and_grad(
+                    lambda q: cm.private_loss(q, inp, la, k))(p)
+                p2, o2, _ = adamw_update(p, grads, o, opt_cfg)
+                return (p2, o2), loss
+            (params, opt), losses = jax.lax.scan(body, (params, opt),
+                                                 (inputs, labs, keys))
+            return params, opt, jnp.mean(losses)
+
+        share = jax.jit(cm.share_logits)
+        eval_ce = jax.jit(
+            lambda p, x, y: cm.public_ce_and_logits(p, x, y, None)[0])
+        self._progs[arch] = {"local": local_scan, "share": share,
+                             "eval_ce": eval_ce}
+        return self._progs[arch]
+
+    def _mutual_prog(self, arch: str, kl_weight: float):
+        cache_key = (arch, kl_weight)
+        if cache_key in self._progs:
+            return self._progs[cache_key]
+        cm = self._models[arch]
+        opt_cfg = self.opt_cfg
+        kl_w = kl_weight
+
+        @jax.jit
+        def mutual_step(params, opt, inputs, labs, others_logits, key):
+            """Eq. 1 with the received logits fixed (one mutual epoch)."""
+            def loss_fn(p):
+                ce, live = cm.public_ce_and_logits(p, inputs, labs, key)
+                kl = jnp.mean(kl_to_received(live, others_logits))
+                return ce + kl_w * kl, (ce, kl)
+            (_, (ce, kl)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+            return params, opt, ce, kl
+
+        self._progs[cache_key] = mutual_step
+        return mutual_step
+
+    def _sparse_prog(self, arch: str, kl_weight: float, k: int) -> Dict:
+        """Top-k variants: publish (indices, log-probs) of the k most
+        likely classes; descend Eq. 1 against the received sparse sets."""
+        cache_key = (arch, kl_weight, "sparse", k)
+        if cache_key in self._progs:
+            return self._progs[cache_key]
+        cm = self._models[arch]
+        opt_cfg = self.opt_cfg
+        kl_w = kl_weight
+
+        @jax.jit
+        def share_topk(params, inputs):
+            return topk_predictions(cm.share_logits(params, inputs), k)
+
+        @jax.jit
+        def mutual_sparse(params, opt, inputs, labs, idx, logp, key):
+            def loss_fn(p):
+                ce, live = cm.public_ce_and_logits(p, inputs, labs, key)
+                kl = jnp.mean(sparse_kl_to_received(live, idx, logp))
+                return ce + kl_w * kl, (ce, kl)
+            (_, (ce, kl)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+            return params, opt, ce, kl
+
+        self._progs[cache_key] = {"share_topk": share_topk,
+                                  "mutual_sparse": mutual_sparse}
+        return self._progs[cache_key]
+
+    # -- helpers ----------------------------------------------------------
+    def _round_key(self, r: int) -> jax.Array:
+        return jax.random.fold_in(self.base_key, r)
+
+    def _gather(self, idx: np.ndarray):
+        return jnp.asarray(self.data[idx]), jnp.asarray(self.labels[idx])
+
+    @property
+    def bytes_per_position(self) -> int:
+        return self.n_classes * 4
+
+    @property
+    def params_per_client(self) -> int:
+        return self.n_params[0]
+
+    # -- strategy capabilities --------------------------------------------
+    def local_phase(self, r: int, part: List[int], pm) -> List[float]:
+        K = self.n_clients
+        key_r = self._round_key(r)
+        self._plan_seed += 1
+        # K folds popped in Algorithm-1 order regardless of participation
+        # (the fold budget is part of the protocol); the absentees' folds
+        # go unused this round
+        folds = [self.folds.pop() for _ in range(K)]
+        local_losses = [0.0] * K
+        for c in part:
+            idx, _ = round_batch_indices([folds[c]], self.local_epochs,
+                                         self.batch_size,
+                                         seed=self._plan_seed * K + c)
+            idx = idx[0, :self._local_T]            # fixed T: stable jit cache
+            if idx.shape[0] == 0:
+                continue
+            inputs, labs = self._gather(idx)
+            keys = jax.random.split(jax.random.fold_in(key_r, 100 + c),
+                                    idx.shape[0])
+            prog = self._prog(self.archs[c])
+            self.client_params[c], self.client_opts[c], loss = prog["local"](
+                self.client_params[c], self.client_opts[c], inputs, labs,
+                keys)
+            local_losses[c] = float(loss)
+        self._last_local_losses = local_losses
+        return local_losses
+
+    def public_payload(self, r: int):
+        # the rotating public fold, truncated to the public-batch budget
+        return self.folds.pop()[:self._pub_n]
+
+    def weights_payload(self, r: int):
+        return self.folds.pop()[:self._pub_n]
+
+    def mutual_phase(self, r, part, pm, payload, kl_weight, mutual_epochs,
+                     sparse_k: int = 0) -> dict:
+        K = self.n_clients
+        pub = payload.data
+        pub_inputs, pub_labs = self._gather(pub)
+        key_r = self._round_key(r)
+        public_ce = [0.0] * K
+        kl_losses = [0.0] * K
+        out = {"ran": False, "positions": 0, "public_ce": public_ce,
+               "kl_loss": kl_losses}
+        if mutual_epochs <= 0 or len(part) < 2:
+            return out
+        n_pub = None
+        for e in range(mutual_epochs):
+            # every participant publishes; ONLY these tensors cross
+            # client boundaries
+            if sparse_k:
+                shared = [tuple(np.asarray(t) for t in self._sparse_prog(
+                    self.archs[c], kl_weight, sparse_k)["share_topk"](
+                        self.client_params[c], pub_inputs)) for c in part]
+                idx_stack = np.stack([s[0] for s in shared])  # (M,N_pub,k)
+                logp_stack = np.stack([s[1] for s in shared])
+                n_pub = idx_stack.shape[1]
+            else:
+                shared = [np.asarray(self._prog(self.archs[c])["share"](
+                    self.client_params[c], pub_inputs)) for c in part]
+                stack = np.stack(shared)            # (M, N_pub, V)
+                n_pub = stack.shape[1]
+            for s, c in enumerate(part):
+                k = jax.random.fold_in(key_r, 1000 + e * K + c)
+                if sparse_k:
+                    others_idx = jnp.asarray(np.delete(idx_stack, s, axis=0))
+                    others_logp = jnp.asarray(np.delete(logp_stack, s,
+                                                        axis=0))
+                    prog = self._sparse_prog(self.archs[c], kl_weight,
+                                             sparse_k)
+                    (self.client_params[c], self.client_opts[c],
+                     ce, kl) = prog["mutual_sparse"](
+                        self.client_params[c], self.client_opts[c],
+                        pub_inputs, pub_labs, others_idx, others_logp, k)
+                else:
+                    others = jnp.asarray(np.delete(stack, s, axis=0))
+                    step = self._mutual_prog(self.archs[c], kl_weight)
+                    (self.client_params[c], self.client_opts[c],
+                     ce, kl) = step(
+                        self.client_params[c], self.client_opts[c],
+                        pub_inputs, pub_labs, others, k)
+                public_ce[c] = float(ce)
+                kl_losses[c] = float(kl)
+        return {"ran": True, "positions": n_pub, "public_ce": public_ce,
+                "kl_loss": kl_losses}
+
+    # -- weight strategies: the identical-arch degenerate case -------------
+    def _stacked(self):
+        return stacking.stack_params(self.client_params)
+
+    def _unstack_into(self, stacked) -> None:
+        self.client_params = stacking.unstack_params(stacked,
+                                                     self.n_clients)
+
+    def fedavg_combine(self, part: List[int], pm) -> None:
+        stacked = self._stacked()
+        if len(part) == self.n_clients:
+            stacked = average_weights(stacked)
+        else:
+            avg = weighted_average_weights(stacked, jnp.asarray(pm))
+            stacked = stacking.client_lerp(stacked, avg, pm)
+        self._unstack_into(stacked)
+
+    def async_combine(self, r, part, pm, delta, min_round, pub) -> str:
+        from repro.core.distributed import async_sync
+        layer = layer_schedule(r, delta, min_round)
+        stacked = self._stacked()
+        # weighting metric: inverse local loss (the engine has no
+        # per-client held-out accuracy for LM clients), masked so
+        # absentees contribute nothing and receive nothing back
+        scores = np.asarray(
+            [1.0 / (1.0 + max(l, 0.0)) for l in self._last_local_losses],
+            np.float32) * pm
+        synced = async_sync(stacked, jnp.asarray(scores),
+                            self._shallow_mask(stacked), r, delta, min_round)
+        if len(part) < self.n_clients:
+            synced = stacking.client_lerp(stacked, synced, pm)
+        self._unstack_into(synced)
+        return layer
+
+    def _shallow_mask(self, stacked):
+        if not hasattr(self, "_shallow_mask_cache"):
+            from repro.core.distributed import transformer_shallow_mask
+            cfg = self._models[self.archs[0]].cfg
+            self._shallow_mask_cache = transformer_shallow_mask(cfg, stacked)
+        return self._shallow_mask_cache
+
+    def async_param_counts(self):
+        stacked = self._stacked()
+        return broadcast_mask_counts(stacked, self._shallow_mask(stacked),
+                                     self.n_clients)
+
+    # -- eval -------------------------------------------------------------
+    def evaluate(self, history, split=None):
+        """Per-client model loss on the common held-out fold (comparable
+        across families — it is the same public-style CE every client
+        optimises in Eq. 1)."""
+        if split is not None:
+            raise ValueError(
+                "the hetero population evaluates on its held-out common "
+                "fold; call evaluate() / evaluate(split=None)")
+        inputs, labs = self._gather(self.eval_fold)
+        history.client_eval_loss = [
+            float(self._prog(a)["eval_ce"](p, inputs, labs))
+            for a, p in zip(self.archs, self.client_params)]
+        return history
+
+    # -- checkpoint/resume ------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"clients": [{"params": p, "opt": o} for p, o in
+                            zip(self.client_params, self.client_opts)]}
+
+    def meta_dict(self) -> dict:
+        return {
+            "engine": self.engine_name,
+            "archs": list(self.archs),
+            "n_rounds": self.rounds,
+            "pool_n": len(self.labels),
+            "plan_seed": self._plan_seed,
+            "scheduler": self.folds.state(),
+        }
+
+    def check_meta(self, meta: dict) -> None:
+        if meta.get("archs") != list(self.archs):
+            raise ValueError(f"checkpoint archs {meta.get('archs')} != "
+                             f"config archs {list(self.archs)}")
+        # the fold PARTITION is deterministic in (labels, K, rounds, seed):
+        # a different round schedule or pool silently re-partitions the
+        # data, so the restored cursor would index folds the checkpointed
+        # run never saw — refuse instead of resuming on the wrong folds
+        if meta.get("n_rounds", self.rounds) != self.rounds or \
+                meta.get("pool_n", len(self.labels)) != len(self.labels):
+            raise ValueError(
+                f"checkpoint schedule (rounds={meta.get('n_rounds')}, "
+                f"pool={meta.get('pool_n')}) != config "
+                f"(rounds={self.rounds}, pool={len(self.labels)}); "
+                "resume needs the same fold partition — save with the full "
+                "round budget and stop early via run(until=...)")
+
+    def load_state_dict(self, state: dict, meta: dict) -> None:
+        self.client_params = [c["params"] for c in state["clients"]]
+        self.client_opts = [c["opt"] for c in state["clients"]]
+        self._plan_seed = int(meta["plan_seed"])
+        self.folds.load_state(meta["scheduler"])

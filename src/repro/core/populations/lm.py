@@ -1,0 +1,249 @@
+"""LLM-scale stacked client population — the ``core.distributed`` step
+factories behind the ``Federation`` session layer.
+
+K same-arch clients live as a leading axis on every param/opt leaf
+(``core.stacking``); one round is ONE fused jitted program:
+
+  - dml / sparse-dml: ``distributed.make_dml_train_step`` — private CE +
+    Eq. 1 on the round's public batch in a single update (``fused_dml``:
+    the strategy's local phase and combine are one program here).  With a
+    ``clients`` mesh, ``make_sharded_dml_step`` runs the same semantics
+    device-sharded with ONE all-gather of public logits per round.
+  - fedavg / async: ``make_local_train_step`` for the local phase, then
+    ``fedavg_sync`` / ``async_sync`` on the stacked axis.
+
+Private data is per-client synthetic bigram streams (one domain per
+client — non-IID); the public batch is fresh every round ("dynamically
+changing test dataset", paper §III.A).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as D
+from repro.core import stacking
+from repro.core.async_fl import layer_schedule
+from repro.core.populations.base import Population, broadcast_mask_counts
+from repro.data.synthetic import make_token_stream
+from repro.models import transformer as tfm
+from repro.optim import AdamWConfig
+
+
+class LMClients(Population):
+    """K stacked same-arch LM clients on synthetic domain streams."""
+
+    engine_name = "lm"
+    supported = frozenset({"dml", "sparse-dml", "fedavg", "async"})
+    fused_dml = True
+    log_participants_always = True
+
+    def __init__(self, cfg, n_clients: int = 2, rounds: int = 20,
+                 batch: int = 4, seq: int = 64, lr: float = 1e-3,
+                 seed: int = 0, mesh=None):
+        self.cfg = cfg
+        self.n_clients = n_clients
+        self.rounds = rounds
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.mesh = mesh
+        self.opt_cfg = AdamWConfig(lr=lr, warmup=5, total_steps=rounds)
+        key = jax.random.PRNGKey(seed)
+        self.client_params = D.stacked_init(key, cfg, n_clients)
+        self.client_opts = D.stacked_adamw_init(self.client_params)
+        self._steps = {}
+        self._last_metrics = {}
+
+    def validate_strategy(self, strategy) -> None:
+        super().validate_strategy(strategy)
+        if getattr(strategy, "mutual_epochs", 1) != 1:
+            raise ValueError(
+                "the LM population fuses the whole round into one update "
+                "program; mutual_epochs must be 1")
+        if self.mesh is not None and strategy.name != "dml":
+            raise ValueError(
+                "mesh-sharded LM rounds support the dense dml strategy "
+                f"only (make_sharded_dml_step), got {strategy.name!r}")
+
+    # -- data -------------------------------------------------------------
+    def _private_batch(self, r: int):
+        """(K, B, S) tokens — each client has its own bigram domain."""
+        return jnp.stack([
+            jnp.asarray(make_token_stream(
+                self.batch, self.seq + 1, self.cfg.vocab_size,
+                seed=1000 * r + self.seed, domain=d)[:, :self.seq])
+            for d in range(self.n_clients)])
+
+    def _public_batch(self, r: int):
+        """(B_pub, S) fresh public tokens from an unseen domain."""
+        return jnp.asarray(make_token_stream(
+            max(1, self.batch // 2), self.seq + 1, self.cfg.vocab_size,
+            seed=1000 * (10_000 + r) + self.seed,
+            domain=self.n_clients)[:, :self.seq])
+
+    def _prefix(self, r: int, batch: int):
+        """(B, P, pd) conditioning embeddings for modality-frontend archs
+        (``cfg.prefix_tokens`` > 0); None otherwise."""
+        if not self.cfg.prefix_tokens:
+            return None
+        rng = np.random.default_rng(r)
+        return jnp.asarray(rng.normal(
+            0, 1, (batch, self.cfg.prefix_tokens, self.cfg.prefix_dim)
+        ).astype(np.float32))
+
+    def _private_prefix(self, r: int):
+        p = self._prefix(r, self.batch)
+        if p is None:
+            return None
+        return jnp.broadcast_to(p[None], (self.n_clients,) + p.shape)
+
+    # -- cached jitted steps ----------------------------------------------
+    def _dml_step(self, kl_weight: float, sparse_k: int):
+        key = ("dml", kl_weight, sparse_k, self.mesh is not None)
+        if key not in self._steps:
+            if self.mesh is not None:
+                self._steps[key] = jax.jit(D.make_sharded_dml_step(
+                    self.cfg, self.opt_cfg, self.mesh, self.n_clients,
+                    kl_weight=kl_weight))
+            else:
+                self._steps[key] = jax.jit(D.make_dml_train_step(
+                    self.cfg, self.opt_cfg, kl_weight=kl_weight,
+                    sparse_k=sparse_k))
+        return self._steps[key]
+
+    def _local_step(self):
+        if "local" not in self._steps:
+            self._steps["local"] = jax.jit(D.make_local_train_step(
+                self.cfg, self.opt_cfg))
+        return self._steps["local"]
+
+    # -- strategy capabilities --------------------------------------------
+    def local_phase(self, r: int, part: List[int], pm) -> List[float]:
+        part_mask = jnp.asarray(pm) if len(part) < self.n_clients else None
+        tokens = self._private_batch(r)
+        self.client_params, self.client_opts, m = self._local_step()(
+            self.client_params, self.client_opts, tokens,
+            self._private_prefix(r), part_mask)
+        self._last_metrics = m
+        return [float(x) * w for x, w in zip(np.asarray(m["ce"]), pm)]
+
+    def public_payload(self, r: int):
+        return self._public_batch(r)
+
+    def weights_payload(self, r: int):
+        return None                      # no fold schedule to discipline
+
+    def mutual_phase(self, r, part, pm, payload, kl_weight, mutual_epochs,
+                     sparse_k: int = 0) -> dict:
+        pub = payload.data
+        if len(part) < 2:
+            # nothing to share with: participants train locally only —
+            # the same skip every other population applies when M < 2
+            losses = self.local_phase(r, part, pm)
+            return {"ran": False, "positions": 0, "client_loss": losses,
+                    "kl_loss": [0.0] * self.n_clients}
+        if sparse_k and len(part) < self.n_clients:
+            raise ValueError("sparse top-k sharing + partial participation "
+                             "is not supported by the fused LM step")
+        part_mask = jnp.asarray(pm) if len(part) < self.n_clients else None
+        tokens = self._private_batch(r)
+        step = self._dml_step(kl_weight, sparse_k)
+        if self.mesh is not None:
+            self.client_params, self.client_opts, m = step(
+                self.client_params, self.client_opts, tokens, pub,
+                part_mask=part_mask)
+        else:
+            self.client_params, self.client_opts, m = step(
+                self.client_params, self.client_opts, tokens, pub,
+                prefix=self._private_prefix(r),
+                public_prefix=self._prefix(10_000 + r,
+                                           int(pub.shape[0])),
+                part_mask=part_mask)
+        self._last_metrics = m
+        return {"ran": len(part) >= 2,
+                "positions": int(pub.shape[0]) * int(pub.shape[1]),
+                "client_loss": [float(x) for x in
+                                np.asarray(m["private_loss"])],
+                "public_ce": [float(x) for x in np.asarray(m["public_ce"])],
+                "kl_loss": [float(x) for x in np.asarray(m["kld_avg"])]}
+
+    def fedavg_combine(self, part: List[int], pm) -> None:
+        full = len(part) == self.n_clients
+        self.client_params = D.fedavg_sync(
+            self.client_params, None if full else jnp.asarray(pm))
+
+    def async_combine(self, r, part, pm, delta, min_round, pub) -> str:
+        layer = layer_schedule(r, delta, min_round)
+        ce = np.asarray(self._last_metrics["ce"], np.float32)
+        # weighting metric: inverse local loss, masked so absentees
+        # contribute no weight and receive nothing back
+        scores = (1.0 / (1.0 + np.maximum(ce, 0.0))) * pm
+        synced = D.async_sync(self.client_params, jnp.asarray(scores),
+                              self._shallow_mask(), r, delta, min_round)
+        if len(part) < self.n_clients:
+            synced = stacking.client_lerp(self.client_params, synced, pm)
+        self.client_params = synced
+        return layer
+
+    def _shallow_mask(self):
+        if not hasattr(self, "_shallow_mask_cache"):
+            self._shallow_mask_cache = D.transformer_shallow_mask(
+                self.cfg, self.client_params)
+        return self._shallow_mask_cache
+
+    def async_param_counts(self):
+        return broadcast_mask_counts(self.client_params,
+                                     self._shallow_mask(), self.n_clients)
+
+    @property
+    def bytes_per_position(self) -> int:
+        return self.cfg.vocab_size * 4
+
+    @property
+    def params_per_client(self) -> int:
+        total = sum(x.size for x in jax.tree.leaves(self.client_params))
+        return int(total // self.n_clients)
+
+    # -- eval / checkpoint -------------------------------------------------
+    def evaluate(self, history, split=None):
+        """Per-client CE on a fresh shared eval batch (domain K, never a
+        training domain)."""
+        if split is not None:
+            raise ValueError(
+                "the LM population evaluates on a fresh held-out synthetic "
+                "batch; call evaluate() / evaluate(split=None)")
+        toks = jnp.asarray(make_token_stream(
+            self.batch, self.seq + 1, self.cfg.vocab_size,
+            seed=777_000 + self.seed, domain=self.n_clients)[:, :self.seq])
+        if "eval" not in self._steps:
+            self._steps["eval"] = jax.jit(jax.vmap(
+                lambda p, t, pe: tfm.loss_fn(p, self.cfg, t, pe)[0],
+                in_axes=(0, None, None)))
+        losses = self._steps["eval"](self.client_params, toks,
+                                     self._prefix(777_000, self.batch))
+        history.client_eval_loss = [float(x) for x in np.asarray(losses)]
+        return history
+
+    def state_dict(self) -> dict:
+        return {"client_params": self.client_params,
+                "client_opts": self.client_opts}
+
+    def meta_dict(self) -> dict:
+        return {"engine": self.engine_name, "arch": self.cfg.name,
+                "n_clients": self.n_clients, "n_rounds": self.rounds}
+
+    def check_meta(self, meta: dict) -> None:
+        if meta.get("arch") != self.cfg.name or \
+                meta.get("n_clients") != self.n_clients:
+            raise ValueError(
+                f"checkpoint (arch={meta.get('arch')}, "
+                f"K={meta.get('n_clients')}) != config "
+                f"(arch={self.cfg.name}, K={self.n_clients})")
+
+    def load_state_dict(self, state: dict, meta: dict) -> None:
+        self.client_params = state["client_params"]
+        self.client_opts = state["client_opts"]

@@ -1,0 +1,692 @@
+"""Stacked-VisionNet client population — the paper's Algorithm-1 case
+study as a ``Federation`` population.
+
+Clients are a *stacked* pytree (leading axis K — ``core.stacking``, the
+same client-axis layout the mesh-scale path shards over pods) and a full
+round executes as a handful of jitted programs instead of O(K · batches)
+Python-dispatched calls:
+
+  _local_scan     vmap over clients of lax.scan over the fixed-shape
+                  (K, T, B) batch plan from ``data.federated``
+  _mutual_scan    all mutual epochs fused: dropout-free share + Eq.-1
+                  descent for all K clients (``mutual.bernoulli_mutual_terms_vs``)
+  _predict_stacked  vmapped inference — sharing, scores, and eval
+
+With a ``clients`` mesh (``VisionClients(..., mesh=...)``) the same two
+training programs run inside ``sharding.shard_map`` over the client axis:
+each device owns whole clients (round-robin spill for K > n_devices via
+``stacking.client_layout``), local training is collective-free, and the
+mutual phase's ONLY cross-device traffic is one all-gather of the public-
+fold predictions per mutual epoch — exactly the bytes the strategy's
+``comm_bytes`` simulates.  Results are bitwise-identical to the unsharded
+engine (tests/test_multidevice.py holds this for all 3 methods).
+
+The population executes the ``dml`` / ``fedavg`` / ``async`` strategies;
+``sparse-dml`` is rejected — the VisionNet head shares Bernoulli
+probabilities (one float per example), which have no top-k structure to
+sparsify.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.configs.visionnet import VisionNetConfig
+from repro.core import async_fl, fedavg, stacking
+from repro.core.mutual import _pair_mask, bernoulli_mutual_terms_vs
+from repro.core.populations.base import Population
+from repro.data.federated import (FoldScheduler, NonIIDScheduler,
+                                  round_batch_indices)
+from repro.models.visionnet import (bce_loss, init_visionnet,
+                                    shallow_deep_split, visionnet_forward)
+from repro.optim import SGDConfig, sgd_init, sgd_update
+
+# ---------------------------------------------------------------------------
+# jitted programs — each one covers ALL K clients in a single dispatch
+
+
+def _masked_lerp(old, new, w):
+    """Apply ``new`` only where the step is real (w=1); padding keeps old."""
+    return jax.tree.map(lambda a, b: w * b + (1 - w) * a, old, new)
+
+
+def _local_scan_impl(stacked_params, stacked_opt, images, labels, masks,
+                     keys, vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                     conv_impl: str = "fused"):
+    """Body of ``_local_scan`` — also the per-device shard_map body of
+    ``_sharded_local_scan`` (per-client work is embarrassingly parallel, so
+    the sharded engine runs this code unchanged on each device's slice).
+
+    K > 1 runs in canonical width-2 client chunks
+    (``stacking.chunked_client_map``) so the per-client arithmetic is
+    bit-identical no matter how many clients this program instance holds;
+    K == 1 (the global model) keeps the plain single-client vmap.
+    """
+
+    def one_client(params, opt, imgs, labs, w, ks):
+        def body(carry, xs):
+            p, o = carry
+            im, la, wi, k = xs
+
+            def loss_fn(q):
+                probs = visionnet_forward(q, vn_cfg, im, train=True,
+                                          dropout_key=k,
+                                          conv_impl=conv_impl)
+                return bce_loss(probs, la)
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p2, o2, _ = sgd_update(p, grads, o, sgd_cfg)
+            p2 = _masked_lerp(p, p2, wi)
+            o2 = {"vel": _masked_lerp(o["vel"], o2["vel"], wi),
+                  "step": o["step"] + wi.astype(jnp.int32)}
+            return (p2, o2), loss * wi
+
+        (params, opt), losses = jax.lax.scan(body, (params, opt),
+                                             (imgs, labs, w, ks))
+        return params, opt, jnp.sum(losses) / jnp.maximum(jnp.sum(w), 1.0)
+
+    args = (stacked_params, stacked_opt, images, labels, masks, keys)
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    if K == 1:
+        return jax.vmap(one_client)(*args)
+    return stacking.chunked_client_map(
+        lambda a, _c: jax.vmap(one_client)(*a), args, K)
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
+                                             "conv_impl"))
+def _local_scan(stacked_params, stacked_opt, images, labels, masks, keys,
+                vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                conv_impl: str = "fused"):
+    """Local epochs for all clients: vmap(client) of scan(batch plan).
+
+    images (K,T,B,H,W,C) · labels (K,T,B) · masks (K,T) · keys (K,T,2).
+    Returns (stacked_params, stacked_opt, mean BCE per client (K,)).
+    """
+    return _local_scan_impl(stacked_params, stacked_opt, images, labels,
+                            masks, keys, vn_cfg, sgd_cfg, conv_impl)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_local_program(mesh, n_clients: int, vn_cfg: VisionNetConfig,
+                           sgd_cfg: SGDConfig, conv_impl: str):
+    body = functools.partial(_local_scan_impl, vn_cfg=vn_cfg,
+                             sgd_cfg=sgd_cfg, conv_impl=conv_impl)
+    spec = stacking.client_spec()
+    return jax.jit(sharding.shard_map(body, mesh, in_specs=(spec,) * 6,
+                                      out_specs=(spec, spec, spec)))
+
+
+def _sharded_local_scan(stacked_params, stacked_opt, images, labels, masks,
+                        keys, mesh, n_clients: int,
+                        vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                        conv_impl: str = "fused"):
+    """``_local_scan`` inside shard_map over the ``clients`` mesh axis.
+
+    Each device trains only the clients it owns (round-robin layout from
+    ``stacking``; K > n_devices spills extra clients as second/third slots)
+    and the phase runs with ZERO cross-device collectives — private data
+    never leaves its device, matching the paper's locality claim.
+
+    The round-robin reorder/pad runs EAGERLY, outside the jitted shard_map
+    program: an in-jit gather feeding shard_map lets XLA's layout
+    assignment propagate non-standard layouts into the per-device body,
+    whose convs/GEMMs then round differently from the unsharded engine.
+    """
+    n_dev = mesh.shape[stacking.CLIENT_AXIS]
+    shard = lambda t: stacking.shard_clients(t, n_clients, n_dev)
+    run = _sharded_local_program(mesh, n_clients, vn_cfg, sgd_cfg,
+                                 conv_impl)
+    p, o, losses = run(shard(stacked_params), shard(stacked_opt),
+                       shard(images), shard(labels), shard(masks),
+                       shard(keys))
+    unshard = lambda t: stacking.unshard_clients(t, n_clients, n_dev)
+    return unshard(p), unshard(o), unshard(losses)
+
+
+def _isolated_epoch(epoch):
+    """Pin a scan body as its own compilation unit.  XLA inlines
+    trip-count-1 loops (mutual_epochs=1 is the default), and an inlined
+    epoch fuses with its surroundings — which differ between the sharded
+    and unsharded engines — breaking their bitwise parity."""
+    def wrapped(carry, xs):
+        carry, xs = jax.lax.optimization_barrier((carry, xs))
+        return jax.lax.optimization_barrier(epoch(carry, xs))
+    return wrapped
+
+
+def _predict_chunked(stacked_params, images, vn_cfg: VisionNetConfig):
+    """Dropout-free stacked forward in canonical client chunks: (K, B)."""
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    fn = lambda a, c: jax.vmap(
+        lambda q: visionnet_forward(q, vn_cfg, c[0], train=False))(a[0])
+    return stacking.chunked_client_map(fn, (stacked_params,), K,
+                                       const_args=(images,))
+
+
+def _mutual_epoch_step(stacked_params, stacked_opt, keys_e, pm_rows,
+                       pair_rows, shared, pub_images, pub_labels,
+                       vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                       kl_weight: float, conv_impl: str):
+    """One Eq.-1 descent for a stack of clients against FIXED shared
+    predictions.
+
+    ``shared`` (K, B) is the fleet's dropout-free public-fold predictions
+    in natural client order (already stop-gradient'ed: received predictions
+    are data); ``pair_rows`` the matching rows of the Eq.-2 pair mask, and
+    ``pm_rows`` the rows' participation bits.  Runs in canonical width-2
+    chunks, so the unsharded engine (full K rows) and each device of the
+    sharded engine (its K_loc rows) execute bit-identical per-client
+    arithmetic.  Returns (params, opt, (bce, kld)).
+    """
+
+    def chunk(args, const):
+        c_params, c_opt, c_keys, c_pm, c_w = args
+        c_shared, c_imgs, c_labs = const
+
+        def total_loss(cp):
+            live = jax.vmap(
+                lambda q, k: visionnet_forward(q, vn_cfg, c_imgs,
+                                               train=True, dropout_key=k,
+                                               conv_impl=conv_impl)
+            )(cp, c_keys)                                       # (2,B)
+            bce = jax.vmap(lambda pr: bce_loss(pr, c_labs))(live)
+            kld = jnp.mean(bernoulli_mutual_terms_vs(live, c_shared, c_w),
+                           axis=-1)                             # (2,)
+            return (jnp.sum(bce * c_pm) + kl_weight * jnp.sum(kld),
+                    (bce, kld))
+
+        (_, (bce, kld)), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(c_params)
+        # per-client update so grad clipping stays per client, exactly as
+        # in the per-client loop this replaces
+        new_p, new_o, _ = jax.vmap(
+            lambda q, g, o: sgd_update(q, g, o, sgd_cfg))(c_params, grads,
+                                                          c_opt)
+        p = jax.vmap(_masked_lerp)(c_params, new_p, c_pm)
+        o = {"vel": jax.vmap(_masked_lerp)(c_opt["vel"], new_o["vel"],
+                                           c_pm),
+             "step": c_opt["step"] + c_pm.astype(jnp.int32)}
+        return p, o, (bce, kld)
+
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    return stacking.chunked_client_map(
+        chunk, (stacked_params, stacked_opt, keys_e, pm_rows, pair_rows), K,
+        const_args=(shared, pub_images, pub_labels))
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
+                                             "kl_weight", "conv_impl"))
+def _mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels, keys,
+                 part_mask, vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                 kl_weight: float, conv_impl: str = "fused"):
+    """All mutual epochs for all K clients, fused into one program.
+
+    keys (E, K, 2) · part_mask (K,) 0/1.  Per epoch: every participant
+    shares its dropout-free predictions on the public fold (what actually
+    goes over the wire), then descends Eq. 1 — BCE + kl_weight · KLD vs the
+    received tensor held fixed.  Partial participation masks absentees out
+    of the Eq.-2 average AND out of the update (their params/opt ride
+    through unchanged).  Returns the final epoch's per-client
+    (total loss, bce, kld), each (K,).
+    """
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    pair_w = _pair_mask(K, part_mask)
+
+    def epoch(carry, ks):
+        params, opt = carry
+        shared = jax.lax.stop_gradient(
+            _predict_chunked(params, pub_images, vn_cfg))          # (K,B)
+        params, opt, (bce, kld) = _mutual_epoch_step(
+            params, opt, ks, part_mask, pair_w, shared, pub_images,
+            pub_labels, vn_cfg, sgd_cfg, kl_weight, conv_impl)
+        return (params, opt), (bce + kl_weight * kld, bce, kld)
+
+    (stacked_params, stacked_opt), (loss, bce, kld) = jax.lax.scan(
+        _isolated_epoch(epoch), (stacked_params, stacked_opt), keys)
+    return stacked_params, stacked_opt, (loss[-1], bce[-1], kld[-1])
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_mutual_program(mesh, n_clients: int, vn_cfg: VisionNetConfig,
+                            sgd_cfg: SGDConfig, kl_weight: float,
+                            conv_impl: str):
+    n_dev = mesh.shape[stacking.CLIENT_AXIS]
+
+    def body(params, opt, pub_imgs, pub_labs, ks, pm_full):
+        gids = stacking.local_client_ids(n_clients, n_dev)
+        safe = jnp.minimum(gids, n_clients - 1)
+        real = (gids < n_clients).astype(jnp.float32)    # 0 on dummy slots
+        pm_loc = jnp.take(pm_full, safe) * real
+        pair_rows = jnp.take(_pair_mask(n_clients, pm_full), safe,
+                             axis=0) * real[:, None]
+
+        def epoch(carry, kk):
+            params, opt = carry
+            shared_loc = _predict_chunked(params, pub_imgs,
+                                          vn_cfg)        # (K_loc, B)
+            shared = jax.lax.stop_gradient(stacking.gather_clients(
+                shared_loc, n_clients, n_dev)[:n_clients])  # (K, B) natural
+            params, opt, (bce, kld) = _mutual_epoch_step(
+                params, opt, kk, pm_loc, pair_rows, shared, pub_imgs,
+                pub_labs, vn_cfg, sgd_cfg, kl_weight, conv_impl)
+            return (params, opt), (bce + kl_weight * kld, bce, kld)
+
+        (params, opt), (loss, bce, kld) = jax.lax.scan(
+            _isolated_epoch(epoch), (params, opt), ks)
+        return params, opt, (loss[-1], bce[-1], kld[-1])
+
+    spec = stacking.client_spec()
+    return jax.jit(sharding.shard_map(
+        body, mesh,
+        in_specs=(spec, spec, P(), P(), P(None, stacking.CLIENT_AXIS), P()),
+        out_specs=(spec, spec, (spec, spec, spec))))
+
+
+def _sharded_mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels,
+                         keys, part_mask, mesh, n_clients: int,
+                         vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                         kl_weight: float, conv_impl: str = "fused"):
+    """``_mutual_scan`` inside shard_map over the ``clients`` mesh axis.
+
+    Per mutual epoch each device forwards its own clients on the public
+    fold and the (K_loc, B_pub) predictions are all-gathered — the ONLY
+    cross-device collective of the whole round, and precisely the tensor
+    Algorithm 1 says crosses client boundaries.  The gathered fleet is
+    restored to natural client order (``stacking.gather_clients``) before
+    the Eq.-2 sum so reduction order — and hence every float — matches the
+    unsharded engine bitwise.  Each device then descends Eq. 1 for its own
+    clients only (rows of the pair-mask select them); dummies from the
+    round-robin padding are masked out of both the average and the update.
+    The reorder/pad runs eagerly outside the jitted program (see
+    ``_sharded_local_scan`` — in-jit gathers perturb body layouts).
+    """
+    n_dev = mesh.shape[stacking.CLIENT_AXIS]
+    run = _sharded_mutual_program(mesh, n_clients, vn_cfg, sgd_cfg,
+                                  kl_weight, conv_impl)
+    p, o, (loss, bce, kld) = run(
+        stacking.shard_clients(stacked_params, n_clients, n_dev),
+        stacking.shard_clients(stacked_opt, n_clients, n_dev),
+        pub_images, pub_labels,
+        stacking.shard_clients(keys, n_clients, n_dev, axis=1),
+        jnp.asarray(part_mask, jnp.float32))
+    unshard = lambda t: stacking.unshard_clients(t, n_clients, n_dev)
+    return unshard(p), unshard(o), (unshard(loss), unshard(bce),
+                                    unshard(kld))
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg",))
+def _predict_stacked(stacked_params, images, vn_cfg: VisionNetConfig):
+    """Vmapped inference on a SHARED batch: (K-stacked params, (B,...)) ->
+    (K, B) probabilities.  The sharing / eval / accuracy path."""
+    return jax.vmap(lambda p: visionnet_forward(p, vn_cfg, images,
+                                                train=False))(stacked_params)
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg",))
+def _accuracy_scan(stacked_params, images, labels, masks,
+                   vn_cfg: VisionNetConfig):
+    """Per-client accuracy on per-client (padded) data:
+    images (K,N,H,W,C) · labels (K,N) · masks (K,N) -> (K,)."""
+    probs = jax.vmap(
+        lambda p, im: visionnet_forward(p, vn_cfg, im, train=False)
+    )(stacked_params, images)
+    hit = ((probs > 0.5) == (labels > 0.5)).astype(jnp.float32)
+    return jnp.sum(hit * masks, axis=1) / jnp.maximum(
+        jnp.sum(masks, axis=1), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# the population
+
+
+class VisionClients(Population):
+    """K stacked VisionNet clients on a (train_images, train_labels) pool.
+
+    ``mesh``: optional jax Mesh with a ``clients`` axis — the round's two
+    training programs then run device-sharded over the client axis
+    (bitwise-identical results; see the sharded program docstrings).
+    """
+
+    engine_name = "federated"
+    supported = frozenset({"dml", "fedavg", "async"})
+
+    def __init__(self, vn_cfg: VisionNetConfig, train_images: np.ndarray,
+                 train_labels: np.ndarray, n_clients: int = 5,
+                 rounds: int = 12, local_epochs: int = 2,
+                 batch_size: int = 32, lr: float = 0.05,
+                 momentum: float = 0.9, clip_norm: float = 1.0,
+                 non_iid_alpha: float = 0.0, seed: int = 0,
+                 eval_batch: int = 256, mesh=None):
+        if mesh is not None and stacking.CLIENT_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"mesh needs a '{stacking.CLIENT_AXIS}' axis, got "
+                f"{mesh.axis_names}")
+        self.mesh = mesh
+        self.vn_cfg = vn_cfg
+        self.images = train_images
+        self.labels = train_labels
+        self.n_clients = n_clients
+        self.rounds = rounds
+        self.local_epochs = local_epochs
+        self.batch_size = batch_size
+        self.eval_batch = eval_batch
+        self.seed = seed
+        self.sgd_cfg = SGDConfig(lr=lr, momentum=momentum,
+                                 clip_norm=clip_norm)
+        self.key = jax.random.PRNGKey(seed)
+        self._plan_seed = seed * 100_003 + 17
+        # (round, program) pairs — one entry per jitted dispatch, so tests
+        # can assert the engine really is a handful of programs per round
+        self.dispatch_log: List[Tuple[int, str]] = []
+        self._round_idx = -1                      # -1 = init phase
+        # Algorithm 1 line 1: Fold <- (1+Clients) x Rounds + 1
+        if non_iid_alpha > 0:
+            self.folds = NonIIDScheduler(train_labels, n_clients, rounds,
+                                         alpha=non_iid_alpha, seed=seed)
+        else:
+            self.folds = FoldScheduler(train_labels, n_clients, rounds,
+                                       seed=seed)
+        # line 3/6: global model trained on public fold
+        self.key, kg = jax.random.split(self.key)
+        self.global_params = init_visionnet(kg, vn_cfg)
+        self.global_opt = sgd_init(self.global_params)
+        self._train_single(self.folds.pop())
+        # lines 7-8: clients start from G
+        self.client_params = stacking.broadcast_stack(self.global_params,
+                                                      n_clients)
+        self.client_opts = stacking.stacked_sgd_init(self.client_params)
+        self.n_params = sum(p.size
+                            for p in jax.tree.leaves(self.global_params))
+        self.shallow_mask = shallow_deep_split(self.global_params)
+        self._last_folds: Optional[list] = None
+
+    def validate_strategy(self, strategy) -> None:
+        if strategy.name == "sparse-dml":
+            raise ValueError(
+                "sparse-dml needs a categorical prediction space to take a "
+                "top-k of; the stacked VisionNet population shares Bernoulli "
+                "probabilities (one float per example).  Use DML here, or "
+                "SparseDML with the hetero / LM populations.")
+        super().validate_strategy(strategy)
+
+    # -- helpers ----------------------------------------------------------
+    def begin_round(self, r: int) -> None:
+        self._round_idx = r
+
+    def _next_plan_seed(self) -> int:
+        self._plan_seed += 1
+        return self._plan_seed
+
+    def _split_keys(self, *shape) -> jax.Array:
+        """Dropout keys for a whole program at once: (*shape, 2) uint32."""
+        self.key, sub = jax.random.split(self.key)
+        n = int(np.prod(shape))
+        return jax.random.split(sub, n).reshape(*shape, 2)
+
+    def _gather(self, idx: np.ndarray):
+        return jnp.asarray(self.images[idx]), jnp.asarray(self.labels[idx])
+
+    def _train_single(self, fold: np.ndarray) -> float:
+        """Global-model training = the SAME scan program with K=1."""
+        idx, mask = round_batch_indices([fold], self.local_epochs,
+                                        self.batch_size,
+                                        seed=self._next_plan_seed())
+        if idx.shape[1] == 0:
+            return 0.0
+        imgs, labs = self._gather(idx)
+        keys = self._split_keys(1, idx.shape[1])
+        gp = stacking.expand_stack(self.global_params)
+        go = stacking.expand_stack(self.global_opt)
+        gp, go, losses = _local_scan(gp, go, imgs, labs, jnp.asarray(mask),
+                                     keys, self.vn_cfg, self.sgd_cfg,
+                                     conv_impl="native")
+        self.dispatch_log.append((self._round_idx, "local_scan"))
+        self.global_params = stacking.client_slice(gp, 0)
+        self.global_opt = stacking.client_slice(go, 0)
+        return float(losses[0])
+
+    def _local_round(self, part_mask: Optional[np.ndarray] = None):
+        """Pop K client folds and run every client's local epochs in ONE
+        vmapped scan dispatch.  Returns (folds, per-client mean loss).
+
+        ``part_mask`` (K,) 0/1 zeroes the whole batch plan of absent
+        clients — their params/opt ride through the scan untouched (the
+        masked-lerp padding path), exactly as if they never trained.
+        """
+        K = self.n_clients
+        folds, idx, mask = self.folds.pop_round(
+            K, self.local_epochs, self.batch_size,
+            seed=self._next_plan_seed())
+        if idx.shape[1] == 0:
+            return folds, [0.0] * K
+        if part_mask is not None:
+            mask = mask * part_mask[:, None]
+        imgs, labs = self._gather(idx)
+        keys = self._split_keys(K, idx.shape[1])
+        if self.mesh is not None and K > 1:
+            self._to_mesh()
+            self.client_params, self.client_opts, losses = \
+                _sharded_local_scan(self.client_params, self.client_opts,
+                                    imgs, labs, jnp.asarray(mask), keys,
+                                    self.mesh, K, self.vn_cfg, self.sgd_cfg,
+                                    conv_impl="fused")
+        else:
+            self.client_params, self.client_opts, losses = _local_scan(
+                self.client_params, self.client_opts, imgs, labs,
+                jnp.asarray(mask), keys, self.vn_cfg, self.sgd_cfg,
+                conv_impl="fused" if K > 1 else "native")
+        self.dispatch_log.append((self._round_idx, "local_scan"))
+        return folds, [float(x) for x in np.asarray(losses)]
+
+    def _gather_clients_host(self):
+        """Commit the (possibly client-sharded) client state to one device.
+        The weight-sharing baselines gather every client's weights by
+        definition; doing it explicitly keeps their sync math — reduction
+        order included — bitwise-identical to the unsharded engine."""
+        if self.mesh is None:
+            return
+        dev = jax.devices()[0]
+        self.client_params = jax.device_put(self.client_params, dev)
+        self.client_opts = jax.device_put(self.client_opts, dev)
+
+    def _to_mesh(self):
+        """Re-place single-device-committed client state onto the mesh
+        (after a weight-sharing sync gathered it) so the sharded programs
+        see consistent devices; DML chains keep their sharded placement."""
+        leaf = jax.tree.leaves(self.client_params)[0]
+        if not isinstance(getattr(leaf, "sharding", None),
+                          jax.sharding.SingleDeviceSharding):
+            return
+        sh = jax.sharding.NamedSharding(self.mesh, P())
+        self.client_params = jax.device_put(self.client_params, sh)
+        self.client_opts = jax.device_put(self.client_opts, sh)
+
+    def _fold_accuracies(self, folds) -> List[float]:
+        """Each client scored on its OWN fold — one vmapped dispatch over a
+        padded (K, N) stack (the async baseline's weighting metric)."""
+        n = max(max((len(f) for f in folds), default=0), 1)
+        K = len(folds)
+        idx = np.zeros((K, n), np.int64)
+        mask = np.zeros((K, n), np.float32)
+        for c, f in enumerate(folds):
+            idx[c, :len(f)] = f
+            mask[c, :len(f)] = 1.0
+        imgs, labs = self._gather(idx)
+        acc = _accuracy_scan(self.client_params, imgs, labs,
+                             jnp.asarray(mask), self.vn_cfg)
+        self.dispatch_log.append((self._round_idx, "accuracy_scan"))
+        return [float(a) for a in np.asarray(acc)]
+
+    def _accuracy_chunked(self, stacked_params, images, labels) -> np.ndarray:
+        """All clients' accuracy on a SHARED dataset via the vmapped
+        predict, eval_batch examples at a time.  Returns (K,)."""
+        K = jax.tree.leaves(stacked_params)[0].shape[0]
+        correct = np.zeros((K,), np.int64)
+        for i in range(0, len(images), self.eval_batch):
+            probs = _predict_stacked(stacked_params,
+                                     jnp.asarray(images[i:i + self.eval_batch]),
+                                     self.vn_cfg)
+            self.dispatch_log.append((self._round_idx, "predict"))
+            correct += np.sum((np.asarray(probs) > 0.5) ==
+                              labels[None, i:i + self.eval_batch], axis=1)
+        return correct / len(images)
+
+    # -- strategy capabilities --------------------------------------------
+    def local_phase(self, r: int, part: List[int], pm) -> List[float]:
+        K = self.n_clients
+        folds, losses = self._local_round(pm if len(part) < K else None)
+        self._last_folds = folds
+        return losses
+
+    def public_payload(self, r: int):
+        # public fold: rotating common test set from the server
+        return self.folds.pop()
+
+    def weights_payload(self, r: int):
+        return self.folds.pop()
+
+    def mutual_phase(self, r, part, pm, payload, kl_weight, mutual_epochs,
+                     sparse_k: int = 0) -> dict:
+        K = self.n_clients
+        pub = payload.data
+        out = {"ran": False, "positions": len(pub)}
+        if mutual_epochs > 0 and len(part) >= 2:
+            pub_imgs = jnp.asarray(self.images[pub])
+            pub_labs = jnp.asarray(self.labels[pub])
+            keys = self._split_keys(mutual_epochs, K)
+            if self.mesh is not None and K > 1:
+                self.client_params, self.client_opts, (loss, _, kld) = \
+                    _sharded_mutual_scan(self.client_params,
+                                         self.client_opts, pub_imgs,
+                                         pub_labs, keys, jnp.asarray(pm),
+                                         self.mesh, K, self.vn_cfg,
+                                         self.sgd_cfg, kl_weight,
+                                         conv_impl="fused")
+            else:
+                self.client_params, self.client_opts, (loss, _, kld) = \
+                    _mutual_scan(self.client_params, self.client_opts,
+                                 pub_imgs, pub_labs, keys, jnp.asarray(pm),
+                                 self.vn_cfg, self.sgd_cfg, kl_weight,
+                                 conv_impl="fused" if K > 1 else "native")
+            self.dispatch_log.append((r, "mutual_scan"))
+            out = {"ran": True, "positions": len(pub),
+                   "client_loss": [float(x) * m for x, m in
+                                   zip(np.asarray(loss), pm)],
+                   "kl_loss": [float(x) for x in np.asarray(kld)]}
+        return out
+
+    def fedavg_combine(self, part: List[int], pm) -> None:
+        K = self.n_clients
+        self._gather_clients_host()
+        if len(part) == K:
+            self.client_params = fedavg.average_weights(self.client_params)
+            avg = self.client_params
+        else:
+            # server averages the M participants; only they receive the
+            # broadcast back (absentees are offline this round)
+            avg = fedavg.weighted_average_weights(self.client_params,
+                                                  jnp.asarray(pm))
+            self.client_params = stacking.client_lerp(self.client_params,
+                                                      avg, pm)
+        self.global_params = stacking.client_slice(avg, 0)
+
+    def async_combine(self, r, part, pm, delta, min_round, pub) -> str:
+        K = self.n_clients
+        self._gather_clients_host()
+        scores = self._fold_accuracies(self._last_folds)
+        # absentees contribute no weight to the aggregate and receive none
+        # of it back (scores masked -> their average weight is 0)
+        masked_scores = jnp.asarray(np.asarray(scores) * pm)
+        synced, layer = async_fl.async_round_update(
+            self.client_params, masked_scores, self.shallow_mask, r,
+            delta, min_round)
+        # Algorithm 1 lines 17-18: G takes the aggregate then trains on a
+        # fold — sliced from the SYNCED tree (where every client received
+        # the round's average), not from the lerped one below where an
+        # absent client 0 would hand G its stale params
+        self.global_params = stacking.client_slice(synced, 0)
+        if len(part) < K:
+            synced = stacking.client_lerp(self.client_params, synced, pm)
+        self.client_params = synced
+        self._train_single(pub)
+        return layer
+
+    def async_param_counts(self):
+        return async_fl.count_params_by_mask(self.global_params,
+                                             self.shallow_mask)
+
+    @property
+    def params_per_client(self) -> int:
+        return self.n_params
+
+    # -- final eval (paper Table II / Fig. 3) ------------------------------
+    def evaluate(self, history, split=None):
+        if split is None:
+            raise ValueError(
+                "the stacked VisionNet population scores clients on a "
+                "held-out dataset: evaluate(split=(test_images, "
+                "test_labels))")
+        test_images, test_labels = split
+        self._round_idx = self.rounds                  # eval phase
+        self._gather_clients_host()
+        history.client_test_acc = [
+            float(a) for a in self._accuracy_chunked(
+                self.client_params, test_images, test_labels)]
+        gp = stacking.expand_stack(self.global_params)
+        history.global_test_acc = float(self._accuracy_chunked(
+            gp, test_images, test_labels)[0])
+        return history
+
+    # -- checkpoint/resume -------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "client_params": self.client_params,
+            "client_opts": self.client_opts,
+            "global_params": self.global_params,
+            "global_opt": self.global_opt,
+            "key": jax.random.key_data(self.key)
+            if jnp.issubdtype(self.key.dtype, jax.dtypes.prng_key)
+            else self.key,
+        }
+
+    def meta_dict(self) -> dict:
+        return {
+            "engine": self.engine_name,
+            "n_clients": self.n_clients,
+            "n_rounds": self.rounds,
+            "pool_n": len(self.labels),
+            "plan_seed": self._plan_seed,
+            "scheduler": self.folds.state(),
+        }
+
+    def check_meta(self, meta: dict) -> None:
+        if meta.get("n_clients") != self.n_clients:
+            raise ValueError(
+                f"checkpoint K={meta.get('n_clients')} != config "
+                f"K={self.n_clients}")
+        # fold partition is deterministic in (labels, K, rounds, seed); a
+        # different schedule/pool would silently resume on the wrong folds
+        if meta.get("n_rounds", self.rounds) != self.rounds or \
+                meta.get("pool_n", len(self.labels)) != len(self.labels):
+            raise ValueError(
+                f"checkpoint schedule (rounds={meta.get('n_rounds')}, "
+                f"pool={meta.get('pool_n')}) != config "
+                f"(rounds={self.rounds}, pool={len(self.labels)}); "
+                "resume needs the same fold partition — save with the full "
+                "round budget and stop early via run(until=...)")
+
+    def load_state_dict(self, state: dict, meta: dict) -> None:
+        self.client_params = state["client_params"]
+        self.client_opts = state["client_opts"]
+        self.global_params = state["global_params"]
+        self.global_opt = state["global_opt"]
+        self.key = jnp.asarray(state["key"])
+        self._plan_seed = int(meta["plan_seed"])
+        self.folds.load_state(meta["scheduler"])

@@ -1,0 +1,18 @@
+"""Sharing strategies for ``repro.api.Federation`` — one class per
+answer to *what crosses the wire*:
+
+- :class:`DML`          dense prediction sharing (the paper, Eq. 1/2)
+- :class:`SparseDML`    top-k prediction sharing (bandwidth-constrained)
+- :class:`FedAvg`       full weight averaging (baseline #1)
+- :class:`AsyncWeights` shallow/deep scheduled weight sharing (baseline #2)
+
+``get_strategy(name, **knobs)`` resolves CLI ids; :class:`Strategy` is
+the protocol populations are orchestrated through.
+"""
+from repro.core.strategies.base import (Payload, STRATEGIES, Strategy,
+                                        get_strategy)
+from repro.core.strategies.dml import DML, SparseDML
+from repro.core.strategies.weights import AsyncWeights, FedAvg
+
+__all__ = ["Strategy", "Payload", "STRATEGIES", "get_strategy",
+           "DML", "SparseDML", "FedAvg", "AsyncWeights"]

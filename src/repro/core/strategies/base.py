@@ -1,0 +1,105 @@
+"""The ``Strategy`` protocol — *what crosses the wire* as a first-class,
+swappable choice.
+
+The paper's central axis (and the organizing axis of the "What to Share
+in Federated Learning" survey) is the sharing medium: predictions on a
+rotating public fold (Eq. 1/2), full weights (FedAvg), partial weights on
+a schedule (async), or sparse top-k predictions (bandwidth-constrained
+FL).  A :class:`Strategy` packages one such choice — its per-round
+orchestration AND its communication-cost formula — independently of the
+client population executing it (stacked VisionNet, heterogeneous model
+registry, or LLM-scale stacked steps; see ``core.populations``).
+
+One federated round under ``api.Federation`` is always the same four
+protocol steps:
+
+    local_phase    each participant trains on its private fold(s)
+    round_payload  the strategy declares (and the population materialises)
+                   what will cross client boundaries this round
+    combine        the cross-client update — Eq.-1 descent against the
+                   received predictions, or a weight aggregation
+    comm_bytes     the ledger entry for exactly the payload that moved
+
+Populations expose a small capability surface (``local_phase`` /
+``mutual_phase`` / ``fedavg_combine`` / ``async_combine`` / payload
+metadata); strategies orchestrate those capabilities and own every
+protocol hyperparameter (``kl_weight``, ``mutual_epochs``, ``delta``,
+``sparse_k``, ...).  Model/optimizer/data configuration stays with the
+population — that separation is what makes the strategy x population
+matrix composable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+
+
+@dataclass
+class Payload:
+    """What one round moves across client boundaries.
+
+    kind      'predictions' | 'sparse-predictions' | 'weights'
+    data      population-specific payload source (e.g. the public-fold
+              index array the predictions are computed on); may be None
+    positions number of shared prediction positions (payload size axis);
+              filled by ``combine`` for prediction strategies
+    """
+    kind: str
+    data: Any = None
+    positions: int = 0
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+
+@runtime_checkable
+class Strategy(Protocol):
+    """Protocol implemented by every sharing strategy.
+
+    ``name`` doubles as the checkpoint ``method`` tag and the CLI /
+    registry id, so it must stay stable across releases.
+    """
+    name: str
+
+    def local_phase(self, pop, r: int, part: List[int],
+                    pm) -> Optional[List[float]]:
+        """Participants' local training; returns per-client losses (or
+        None when the population fuses local+combine in one program)."""
+        ...
+
+    def round_payload(self, pop, r: int, part: List[int]) -> Payload:
+        """Materialise this round's payload source (pops the public fold
+        for prediction strategies — fold-budget discipline is identical
+        across strategies so checkpoints stay schedule-compatible)."""
+        ...
+
+    def combine(self, pop, r: int, part: List[int], pm,
+                payload: Payload) -> Dict[str, Any]:
+        """The cross-client update.  Returns round metrics: any of
+        ``client_loss`` / ``kl_loss`` / ``public_ce`` / ``layer`` /
+        ``ran`` (whether the payload actually moved)."""
+        ...
+
+    def comm_bytes(self, pop, part: List[int], payload: Payload,
+                   out: Dict[str, Any]) -> int:
+        """Bytes this round's payload moved (up + broadcast down)."""
+        ...
+
+
+STRATEGIES: Dict[str, type] = {}
+
+
+def register(cls):
+    STRATEGIES[cls.name] = cls
+    return cls
+
+
+def get_strategy(name: str, **knobs):
+    """Resolve a strategy id ('dml', 'sparse-dml', 'fedavg', 'async') to a
+    configured instance; unknown knobs for that strategy are ignored so one
+    CLI flag namespace can drive the whole matrix."""
+    if name not in STRATEGIES:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"have {sorted(STRATEGIES)}")
+    cls = STRATEGIES[name]
+    import inspect
+    accepted = set(inspect.signature(cls.__init__).parameters)
+    return cls(**{k: v for k, v in knobs.items() if k in accepted})

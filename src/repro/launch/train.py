@@ -1,16 +1,22 @@
 """CPU-runnable training driver (reduced configs) — the end-to-end path.
 
-Single-model pretraining, federated DML across K same-arch clients, or
-heterogeneous-client DML (one arch PER client) on synthetic bigram
-streams.  The same step builders are what the dry-run lowers for the
-production mesh, so this driver doubles as the integration test of the
-whole stack.
+Single-model pretraining, or a federated session through the unified
+``repro.api.Federation`` layer: pick a client population with
+``--method`` (``dml`` = stacked same-arch LM clients, ``hetero`` = one
+arch PER client) and a sharing strategy with ``--strategy``
+(``dml`` / ``sparse-dml`` / ``fedavg`` / ``async``).  The same step
+builders are what the dry-run lowers for the production mesh, so this
+driver doubles as the integration test of the whole stack.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
       --method dml --clients 3 --steps 12
+  PYTHONPATH=src python -m repro.launch.train --method dml --clients 3 \
+      --strategy sparse-dml --sparse-k 64 --steps 8
   PYTHONPATH=src python -m repro.launch.train --method hetero \
       --archs qwen3-4b,mamba2-780m,dbrx-132b --rounds 3 --participation 2
+  PYTHONPATH=src python -m repro.launch.train --method hetero \
+      --archs qwen3-4b,qwen3-4b --strategy fedavg --rounds 3
 
 Device-sharded DML (one device owns whole clients; the only collective is
 the public-logit all-gather — see core.distributed.make_sharded_dml_step):
@@ -25,51 +31,95 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
 from repro.configs import ARCH_IDS, get_reduced
-from repro.core import distributed as dml
-from repro.data.synthetic import make_token_stream
-from repro.launch.steps import make_train_step
-from repro.models import transformer as tfm
-from repro.optim import AdamWConfig, adamw_init
+from repro.core.strategies import get_strategy
+
+
+def _make_strategy(args):
+    return get_strategy(args.strategy, kl_weight=args.kl_weight,
+                        k=args.sparse_k)
+
+
+def _print_history(h) -> None:
+    for rl in h.rounds:
+        print(f"round {rl.round:3d} participants={rl.participants} "
+              f"loss={['%.3f' % x for x in rl.client_loss]} "
+              f"kld={['%.4f' % x for x in rl.kl_loss]} "
+              f"comm_bytes={rl.comm_bytes}", flush=True)
+    print(f"total_comm_bytes={h.total_comm_bytes}")
 
 
 def _run_hetero(args) -> int:
-    """Heterogeneous-client federated mutual learning (core.hetero)."""
-    from repro.core.hetero import HeteroConfig, HeteroTrainer, make_lm_pool
+    """Heterogeneous-client federation (one arch per client)."""
+    from repro.api import Federation, HeteroClients, make_lm_pool
 
     archs = tuple(a.strip() for a in args.archs.split(",") if a.strip())
-    hc = HeteroConfig(archs=archs, rounds=args.rounds, batch_size=args.batch,
-                      public_batch=max(1, args.batch // 2), lr=args.lr,
-                      kl_weight=args.kl_weight,
-                      participation=args.participation, seed=args.seed)
     vocab = get_reduced(archs[0]).vocab_size
     n_folds = (1 + len(archs)) * args.rounds + 1
     pool, labels = make_lm_pool(n_folds * max(2 * args.batch, 8),
                                 args.seq, vocab, seed=args.seed)
     t0 = time.time()
-    tr = HeteroTrainer(hc, pool, labels)
-    print("federating:", ", ".join(
-        f"{a} ({tr._models[a].family})" for a in archs))
+    population = HeteroClients(
+        archs, pool, labels, rounds=args.rounds, batch_size=args.batch,
+        public_batch=max(1, args.batch // 2), lr=args.lr, seed=args.seed)
+    fed = Federation(population, _make_strategy(args),
+                     participation=args.participation)
+    print(f"federating [{args.strategy}]:", ", ".join(
+        f"{a} ({population._models[a].family})" for a in archs))
     if args.resume:
-        tr.restore_state(args.resume)
-        print(f"resumed from {args.resume} at round {tr._round}")
-    h = tr.run(until=args.until)
-    for rl in h.rounds:
-        print(f"round {rl.round:3d} participants={rl.participants} "
-              f"local={['%.3f' % x for x in rl.client_loss]} "
-              f"kld={['%.4f' % x for x in rl.kl_loss]} "
-              f"comm_bytes={rl.comm_bytes}", flush=True)
-    tr.evaluate()
+        fed.restore_state(args.resume)
+        print(f"resumed from {args.resume} at round {fed.round}")
+    h = fed.run(until=args.until)
+    _print_history(h)
+    fed.evaluate()
     print(f"held-out eval loss per client: "
           f"{['%.3f' % x for x in h.client_eval_loss]}")
+    print(f"done in {time.time() - t0:.1f}s")
+    if args.save:
+        fed.save_state(args.save)
+        print(f"saved federated state to {args.save}")
+    return 0
+
+
+def _run_federated_lm(args, cfg) -> int:
+    """Stacked same-arch LM clients (LLM-scale fused round programs)."""
+    from repro.api import Federation, LMClients
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_client_mesh, parse_mesh_spec
+        axes = parse_mesh_spec(args.mesh)
+        if set(axes) != {"clients"}:
+            raise SystemExit(f"--mesh supports clients=N, got {args.mesh}")
+        mesh = make_client_mesh(axes["clients"])
+        print(f"sharding {args.clients} clients over {axes['clients']} "
+              "devices (all-gather of public logits is the only collective)")
+    t0 = time.time()
+    population = LMClients(cfg, n_clients=args.clients, rounds=args.steps,
+                           batch=args.batch, seq=args.seq, lr=args.lr,
+                           seed=args.seed, mesh=mesh)
+    fed = Federation(population, _make_strategy(args),
+                     participation=args.participation)
+    print(f"model: {cfg.name} x {args.clients} clients "
+          f"[{args.strategy} strategy]")
+    if args.resume:
+        fed.restore_state(args.resume)
+        print(f"resumed from {args.resume} at step {fed.round}")
+    h = fed.run(until=args.until)
+    for rl in h.rounds:
+        if rl.round % 5 == 0 or rl.round == args.steps - 1:
+            pl_ = np.asarray(rl.client_loss)
+            kl = np.asarray(rl.kl_loss)
+            print(f"step {rl.round:4d} loss={pl_.mean():.4f} "
+                  f"kld_avg={kl.mean():.5f} spread={pl_.std():.4f} "
+                  f"comm_bytes={rl.comm_bytes}", flush=True)
     print(f"total_comm_bytes={h.total_comm_bytes}")
     print(f"done in {time.time() - t0:.1f}s")
     if args.save:
-        tr.save_state(args.save)
+        fed.save_state(args.save)
         print(f"saved federated state to {args.save}")
     return 0
 
@@ -78,7 +128,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
     ap.add_argument("--method", choices=["single", "dml", "hetero"],
-                    default="single")
+                    default="single",
+                    help="single model, stacked same-arch clients (dml), "
+                         "or one arch per client (hetero)")
+    ap.add_argument("--strategy", default="dml",
+                    choices=["dml", "sparse-dml", "fedavg", "async"],
+                    help="what crosses the wire each round "
+                         "(federated methods only)")
+    ap.add_argument("--sparse-k", type=int, default=64,
+                    help="top-k kept per position for --strategy sparse-dml")
     ap.add_argument("--clients", type=int, default=2)
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
@@ -97,20 +155,30 @@ def main(argv=None) -> int:
     ap.add_argument("--rounds", type=int, default=3,
                     help="federated rounds (hetero)")
     ap.add_argument("--until", type=int, default=0,
-                    help="stop after this round (0 = run all --rounds); "
-                         "with --save this checkpoints mid-schedule so a "
-                         "later --resume run (SAME --rounds) continues "
-                         "bitwise-identically (hetero)")
+                    help="stop after this round/step (0 = run the full "
+                         "schedule); with --save this checkpoints "
+                         "mid-schedule so a later --resume run (SAME "
+                         "schedule) continues bitwise-identically")
     ap.add_argument("--participation", type=int, default=0,
-                    help="clients sampled per round, 0 = all (hetero)")
+                    help="clients sampled per round, 0 = all")
     ap.add_argument("--resume", default=None,
-                    help="restore a --save checkpoint and continue (hetero)")
+                    help="restore a --save checkpoint and continue "
+                         "(federated methods)")
     args = ap.parse_args(argv)
 
     if args.method == "hetero":
         return _run_hetero(args)
 
     cfg = get_reduced(args.arch)
+    if args.method == "dml":
+        return _run_federated_lm(args, cfg)
+
+    from repro.data.synthetic import make_token_stream
+    from repro.launch.steps import make_train_step
+    from repro.models import transformer as tfm
+    from repro.optim import AdamWConfig, adamw_init
+    import jax.numpy as jnp
+
     opt_cfg = AdamWConfig(lr=args.lr, warmup=5, total_steps=args.steps)
     key = jax.random.PRNGKey(args.seed)
 
@@ -126,53 +194,18 @@ def main(argv=None) -> int:
         return out
 
     t0 = time.time()
-    if args.method == "single":
-        params = tfm.init_model(key, cfg)
-        opt = adamw_init(params)
-        step_fn = jax.jit(make_train_step(cfg, opt_cfg))
-        for i in range(args.steps):
-            params, opt, m = step_fn(params, opt, *batch_for(0, i, args.batch))
-            if i % 5 == 0 or i == args.steps - 1:
-                print(f"step {i:4d} ce={float(m['ce']):.4f} "
-                      f"gnorm={float(m['grad_norm']):.2f}", flush=True)
-        final = params
-    else:
-        K = args.clients
-        params = dml.stacked_init(key, cfg, K)
-        opt = dml.stacked_adamw_init(params)
-        if args.mesh:
-            from repro.launch.mesh import make_client_mesh, parse_mesh_spec
-            axes = parse_mesh_spec(args.mesh)
-            if set(axes) != {"clients"}:
-                raise SystemExit(f"--mesh supports clients=N, got {args.mesh}")
-            mesh = make_client_mesh(axes["clients"])
-            print(f"sharding {K} clients over {axes['clients']} devices "
-                  "(all-gather of public logits is the only collective)")
-            step_fn = jax.jit(dml.make_sharded_dml_step(
-                cfg, opt_cfg, mesh, K, kl_weight=args.kl_weight))
-        else:
-            step_fn = jax.jit(dml.make_dml_train_step(
-                cfg, opt_cfg, kl_weight=args.kl_weight))
-        for i in range(args.steps):
-            priv = [batch_for(d, i, args.batch) for d in range(K)]
-            tokens = jnp.stack([b[0] for b in priv])
-            pub = batch_for(K, 10_000 + i, max(1, args.batch // 2))
-            fa = (tokens, pub[0])
-            if cfg.prefix_tokens:
-                fa = (tokens, pub[0],
-                      jnp.stack([b[1] for b in priv]), pub[1])
-            params, opt, m = step_fn(params, opt, *fa)
-            if i % 5 == 0 or i == args.steps - 1:
-                pl_ = np.asarray(m["private_loss"])
-                kl = np.asarray(m["kld_avg"])
-                print(f"step {i:4d} private={pl_.mean():.4f} "
-                      f"kld_avg={kl.mean():.5f} spread={pl_.std():.4f}",
-                      flush=True)
-        final = params
+    params = tfm.init_model(key, cfg)
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    for i in range(args.steps):
+        params, opt, m = step_fn(params, opt, *batch_for(0, i, args.batch))
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} ce={float(m['ce']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f}", flush=True)
 
     print(f"done in {time.time() - t0:.1f}s")
     if args.save:
-        checkpoint.save(args.save, final,
+        checkpoint.save(args.save, params,
                         {"arch": args.arch, "method": args.method,
                          "steps": args.steps})
         print(f"saved checkpoint to {args.save}")

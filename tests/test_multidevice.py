@@ -171,6 +171,31 @@ def test_sharded_llm_dml_step_matches_unsharded():
         np.testing.assert_array_equal(np.asarray(a)[1], np.asarray(b)[1])
 
 
+def test_federation_mesh_bitwise_parity():
+    """The unified API composes the execution backend too: a directly-built
+    Federation(VisionClients(mesh=...), DML()) matches the single-device
+    session bitwise (the legacy-shim mesh tests above cover fedavg/async)."""
+    from repro.api import DML, Federation, VisionClients
+    mesh = _mesh(4)
+    vn, ((tr_x, tr_y), (te_x, te_y)) = _data()
+
+    def run(m):
+        fed = Federation(VisionClients(vn, tr_x, tr_y, n_clients=4,
+                                       rounds=2, local_epochs=1,
+                                       batch_size=16, seed=3, mesh=m),
+                         DML())
+        fed.run()
+        fed.evaluate(split=(te_x, te_y))
+        return fed
+
+    a, b = run(None), run(mesh)
+    for x, y in zip(jax.tree.leaves(a.population.client_params),
+                    jax.tree.leaves(b.population.client_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a.history.total_comm_bytes == b.history.total_comm_bytes
+    assert a.history.client_test_acc == b.history.client_test_acc
+
+
 def test_client_mesh_requires_clients_axis():
     _need(2)
     from repro.sharding import make_mesh
