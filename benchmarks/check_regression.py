@@ -1,0 +1,197 @@
+"""Benchmark regression gate — compare BENCH_<table>.json runs.
+
+Two jobs, one tool:
+
+  1. STRUCTURAL invariants of a single results dir (always checked):
+     bitwise-parity flags true, sparse share_bytes < dense, the sparse
+     mutual-step series monotone in k (wall-clock with a noise factor,
+     the derived FLOP/HBM/wire models strictly).
+  2. REGRESSION vs a committed baseline (when --current is given):
+     deterministic tracked metrics (comm bytes, dispatch counts, derived
+     FLOP/byte models) may not grow more than --tol (default 20%).
+     Wall-clock columns are machine-dependent and reported as info only.
+
+Usage:
+  python -m benchmarks.check_regression --baseline benchmarks/results
+  python -m benchmarks.check_regression --baseline benchmarks/results \
+      --current /tmp/bench_out [--tol 0.2]
+
+Exit 1 on any violated gate; CI runs this after regenerating the tables.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# section -> columns gated deterministically (lower-or-equal is healthy;
+# >tol growth vs baseline fails).  Everything numeric NOT listed here or in
+# WALLCLOCK is treated as an identity column and becomes part of the row key.
+DETERMINISTIC = {
+    "api": ["dispatches_per_round", "comm_bytes_per_round"],
+    "api_sparse": ["comm_bytes_per_federation"],
+    "sharded": ["dispatches_per_round", "comm_bytes_per_round"],
+    "comm": ["bytes_per_federation"],
+    "comm_llm": ["fedavg_bytes", "dml_dense_bytes", "dml_top64_bytes"],
+    "kernels": ["derived_flops", "derived_hbm_bytes"],
+    "kernels_sparse": ["derived_flops", "derived_hbm_bytes", "share_bytes"],
+}
+# machine-dependent columns: never gated, reported as info
+WALLCLOCK = {
+    "kernels": ["us_per_call"],
+    "kernels_sparse": ["us_per_call"],
+    "sharded": ["compile_round_s", "steady_round_s"],
+}
+# columns that must be truthy in the CURRENT run (parity guarantees)
+MUST_BE_TRUE = {
+    "api": ["bitwise_vs_legacy"],
+}
+# wall-clock noise factor for the monotone-in-k check: a smaller-k sparse
+# step may be at most this much slower than the next-larger-k one
+NOISE = 1.10
+
+
+def load_dir(path: str) -> Dict[str, dict]:
+    out = {}
+    for p in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        with open(p) as f:
+            data = json.load(f)
+        out[data["bench"]] = data
+    return out
+
+
+def _row_key(section: str, cols: dict) -> Tuple:
+    skip = set(DETERMINISTIC.get(section, []) + WALLCLOCK.get(section, []) +
+               MUST_BE_TRUE.get(section, []))
+    # ratio-style strings ("3.2x") are derived, not identity
+    return tuple((k, v) for k, v in cols.items()
+                 if k not in skip and not str(v).endswith("x"))
+
+
+def check_structural(benches: Dict[str, dict], errors: List[str]) -> None:
+    """Invariants of one results dir (baseline or fresh run)."""
+    for bench, data in benches.items():
+        for section, rows in data.get("sections", {}).items():
+            for flag in MUST_BE_TRUE.get(section, []):
+                for r in rows:
+                    if flag in r and not r[flag]:
+                        errors.append(f"{bench}/{section}: {flag} is "
+                                      f"falsy in row {_row_key(section, r)}")
+            if section == "sharded":
+                for r in rows:
+                    ok = r.get("bitwise_vs_unsharded")
+                    if ok not in (True, "ref", "True"):
+                        errors.append(f"{bench}/sharded: device_count="
+                                      f"{r.get('device_count')} not bitwise "
+                                      f"vs unsharded ({ok!r})")
+    ks = benches.get("kernels", {}).get("sections", {}).get("kernels_sparse")
+    if ks:
+        impls = sorted({r["impl"] for r in ks})
+        for impl in impls:
+            dense = [r for r in ks if r["impl"] == impl
+                     and r["step"] == "dense"]
+            sparse = sorted((r for r in ks if r["impl"] == impl
+                             and r["step"] == "sparse"),
+                            key=lambda r: -int(r["k"]))
+            if not dense or len(sparse) < 2:
+                errors.append(f"kernels_sparse[{impl}]: missing dense row "
+                              "or <2 sparse k points")
+                continue
+            # wire + model columns: strictly smaller at smaller k, and
+            # every sparse point below the dense baseline
+            for col in ("share_bytes", "derived_flops", "derived_hbm_bytes"):
+                vals = [r[col] for r in sparse]
+                if any(b >= a for a, b in zip(vals, vals[1:])):
+                    errors.append(f"kernels_sparse[{impl}]: {col} not "
+                                  f"strictly decreasing as k shrinks: {vals}")
+                if any(v >= dense[0][col] for v in vals):
+                    errors.append(f"kernels_sparse[{impl}]: sparse {col} "
+                                  f"not below dense ({dense[0][col]})")
+            # wall-clock: monotone non-increasing as k shrinks, with noise
+            us = [r["us_per_call"] for r in sparse]
+            kseq = [r["k"] for r in sparse]
+            bad = [(ka, kb) for (ka, ua), (kb, ub)
+                   in zip(zip(kseq, us), zip(kseq[1:], us[1:]))
+                   if ub > ua * NOISE]
+            if bad:
+                errors.append(f"kernels_sparse[{impl}]: us_per_call not "
+                              f"monotone as k shrinks (k pairs {bad}, "
+                              f"us={us}, noise factor {NOISE})")
+
+
+def check_regression(base: Dict[str, dict], cur: Dict[str, dict],
+                     tol: float, errors: List[str]) -> None:
+    for bench, bdata in base.items():
+        if bench not in cur:
+            print(f"info: bench {bench!r} missing from current run "
+                  "(not regenerated) — skipped")
+            continue
+        for section, brows in bdata.get("sections", {}).items():
+            crows = {_row_key(section, r): r
+                     for r in cur[bench]["sections"].get(section, [])}
+            for br in brows:
+                key = _row_key(section, br)
+                cr = crows.get(key)
+                if cr is None:
+                    errors.append(f"{bench}/{section}: baseline row {key} "
+                                  "missing from current run")
+                    continue
+                for col in DETERMINISTIC.get(section, []):
+                    if col not in br:
+                        continue
+                    b, c = float(br[col]), float(cr[col])
+                    if c > b * (1.0 + tol):
+                        errors.append(
+                            f"{bench}/{section}{key}: {col} regressed "
+                            f"{b:g} -> {c:g} (> {tol:.0%})")
+                for col in WALLCLOCK.get(section, []):
+                    if col in br and float(br[col]) > 0:
+                        d = float(cr[col]) / float(br[col]) - 1.0
+                        if abs(d) > tol:
+                            print(f"info: {bench}/{section}{key}: {col} "
+                                  f"{br[col]} -> {cr[col]} ({d:+.0%}, "
+                                  "wall-clock — not gated)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/results",
+                    help="committed baseline dir of BENCH_*.json")
+    ap.add_argument("--current", default=None,
+                    help="freshly generated dir; omit to only check the "
+                    "baseline's structural invariants")
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="allowed growth of deterministic tracked metrics")
+    args = ap.parse_args(argv)
+    base = load_dir(args.baseline)
+    if not base:
+        print(f"no BENCH_*.json under {args.baseline!r}", file=sys.stderr)
+        return 1
+    errors: List[str] = []
+    if args.current:
+        cur = load_dir(args.current)
+        if not cur:
+            print(f"no BENCH_*.json under {args.current!r}", file=sys.stderr)
+            return 1
+        check_structural(cur, errors)
+        check_regression(base, cur, args.tol, errors)
+    else:
+        check_structural(base, errors)
+    if errors:
+        print(f"\nFAIL — {len(errors)} benchmark gate violation(s):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n = sum(len(rows) for d in base.values()
+            for rows in d.get("sections", {}).values())
+    print(f"ok — {len(base)} bench table(s), {n} baseline rows, "
+          + ("regression+structural gates passed"
+               if args.current else "structural gates passed"))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

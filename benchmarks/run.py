@@ -10,11 +10,15 @@
                  + bitwise parity + sparse-vs-dense comm ratios
   bench_sharded  device-sharded DML rounds: wall-clock + dispatches vs
                  device count (fake CPU host devices), bitwise-checked
-  bench_kernels  kernel wrappers: us_per_call + derived FLOP counts
+  bench_kernels  kernel wrappers (us_per_call + FLOP/byte model + roofline
+                 attribution) and the dense-vs-sparse mutual step vs k
+                 (the fused top-k sparse-KL kernel's perf claim)
 
 Output: CSV-ish lines on stdout (``name,col,col,...``) AND a
 machine-readable ``BENCH_<table>.json`` per bench next to them (--out-dir,
-default cwd) — the perf-trajectory input for future PRs.
+default cwd) — the perf-trajectory input for future PRs.  Committed
+baselines live in benchmarks/results/ and are gated by
+``benchmarks.check_regression`` in CI.
 Run: PYTHONPATH=src python -m benchmarks.run [--fast]
      PYTHONPATH=src python -m benchmarks.run --table sharded
 """
@@ -356,13 +360,27 @@ def _time_call(fn, *args, reps=3):
 
 
 def bench_kernels() -> None:
-    """Kernel entry points (XLA ref impl timed on CPU; derived = FLOPs).
+    """Kernel entry points + the dense-vs-sparse mutual step (the PR's
+    perf claim).
 
-    Wall-time of the Pallas kernels themselves is only meaningful on TPU;
-    interpret mode is a correctness tool.  We time the jnp oracle (what the
-    dry-run lowers) and report the analytic FLOP count per call.
+    Wall-time of the compiled Pallas kernels is only meaningful on TPU;
+    interpret mode is a correctness tool whose wall-clock tracks the
+    kernel's BLOCK structure (work per vocab block), so the sparse table
+    times both the XLA ref graph and the interpreted kernel.  Every row
+    carries the analytic FLOP/byte model + the shared roofline attribution
+    (``analysis.roofline.roofline_terms`` at V5E peaks): ``roofline_frac``
+    = t_compute / max-term, ``bottleneck`` = the binding term.
     """
-    print("\n# kernels: name,us_per_call,derived_flops")
+    from repro.analysis.roofline import roofline_terms
+    from repro.core import mutual
+
+    def _rl(flops, hbm, coll=0.0):
+        t = roofline_terms(flops, hbm, coll)
+        return {"roofline_frac": round(t["roofline_frac"], 3),
+                "bottleneck": t["dominant"].replace("t_", "")}
+
+    print("\n# kernels: name,us_per_call,derived_flops,derived_hbm_bytes,"
+          "roofline_frac,bottleneck")
     key = jax.random.PRNGKey(0)
     # mutual KL (paper Eq. 2) at LLM-ish width
     K, B, V = 4, 64, 8192
@@ -370,15 +388,18 @@ def bench_kernels() -> None:
     f = jax.jit(lambda x: ref.mutual_kl(x))
     us = _time_call(f, logits)
     flops = K * K * B * V * 4                 # softmax + pairwise terms
+    hbm = 4 * (K * B * V + K * K * B * V)     # live + every received tensor
     row("kernels", name="kl_mutual_ref", us_per_call=round(us),
-        derived_flops=flops)
+        derived_flops=flops, derived_hbm_bytes=hbm, **_rl(flops, hbm))
     # attention
     Bq, S, H, hd = 2, 512, 8, 64
     q = jax.random.normal(key, (Bq, S, H, hd))
     f = jax.jit(lambda q: ref.attention(q, q, q))
     us = _time_call(f, q)
+    flops = 4 * Bq * H * S * S * hd
+    hbm = 4 * 4 * Bq * S * H * hd             # q,k,v,out (flash-style IO)
     row("kernels", name="attention_ref", us_per_call=round(us),
-        derived_flops=4 * Bq * H * S * S * hd)
+        derived_flops=flops, derived_hbm_bytes=hbm, **_rl(flops, hbm))
     # SSD
     Bb, Sl, Hh, P, G, N = 2, 1024, 8, 64, 1, 128
     x = jax.random.normal(key, (Bb, Sl, Hh, P))
@@ -387,9 +408,57 @@ def bench_kernels() -> None:
     Bm = jax.random.normal(key, (Bb, Sl, G, N))
     f = jax.jit(lambda x, dt, Bm: ref.ssd(x, dt, A, Bm, Bm, chunk=256)[0])
     us = _time_call(f, x, dt, Bm)
-    chunk_flops = Bb * Hh * (Sl * 256 * (N + P) + Sl * N * P * 3)
+    flops = Bb * Hh * (Sl * 256 * (N + P) + Sl * N * P * 3)
+    hbm = 4 * (2 * Bb * Sl * Hh * P + 2 * Bb * Sl * G * N + Bb * Sl * Hh)
     row("kernels", name="ssd_ref", us_per_call=round(us),
-        derived_flops=chunk_flops)
+        derived_flops=flops, derived_hbm_bytes=hbm, **_rl(flops, hbm))
+
+    # -- dense vs sparse mutual step (value+grad) vs k --------------------
+    # The tentpole claim: SparseDML's combine FLOPs/HBM traffic scale with
+    # the shared top-k size, not the vocab.  step="dense" is the Eq.-2 step
+    # SparseDML replaces (k column = V); step="sparse" rows are the top-k
+    # step at k << V.  share_bytes is what goes on the wire per round.
+    # NOTE on wall-clock: on CPU the XLA *ref* sparse backward scatter-adds
+    # into (K,B,V) per peer — O(K^2 B V) traffic, same order as dense — so
+    # only the k-series trend is meaningful there; the streaming custom-VJP
+    # kernel path (timed via interpret; compiled on TPU) is the one whose
+    # traffic actually scales with k (see the derived columns).
+    print("# kernels_sparse: step,impl,k,us_per_call,share_bytes,"
+          "derived_flops,derived_hbm_bytes,roofline_frac,bottleneck,"
+          "vs_dense")
+    K, B, V = 4, 128, 4096
+    ks = (128, 32, 8)
+    live = jax.random.normal(jax.random.PRNGKey(1), (K, B, V), jnp.float32)
+    logp = jax.nn.log_softmax(live, axis=-1)
+    reps = 3 if FAST else 10
+    for impl in ("ref", "interpret"):
+        if impl == "interpret" and FAST:
+            continue                      # interpreter is slow; full runs only
+        dense = jax.jit(jax.grad(
+            lambda l: jnp.sum(mutual.mutual_kl_loss(l, impl=impl))))
+        dense_us = _time_call(dense, live, reps=reps)
+        flops = 3 * 4 * K * K * B * V          # fwd + bwd ~ 3x fwd
+        hbm = 3 * 4 * (K * B * V + K * K * B * V)
+        share = K * B * V * 4
+        row("kernels_sparse", step="dense", impl=impl, k=V,
+            us_per_call=round(dense_us), share_bytes=share,
+            derived_flops=flops, derived_hbm_bytes=hbm,
+            **_rl(flops, hbm, share), vs_dense="1.0x")
+        for k in ks:
+            vals, idx = jax.lax.top_k(logp, k)
+            step = jax.jit(lambda l, i, v, _impl=impl: jax.grad(
+                lambda ll: jnp.sum(mutual.sparse_mutual_kl_loss(
+                    ll, i, v, impl=_impl)))(l))
+            us = _time_call(step, live, idx, vals, reps=reps)
+            # live softmax/entropy is O(V); every received-side term is O(k)
+            flops = 3 * (4 * K * B * V + 6 * K * (K - 1) * B * k)
+            hbm = 3 * 4 * (K * B * V + 2 * K * (K - 1) * B * k)
+            share = 2 * K * B * k * 8
+            row("kernels_sparse", step="sparse", impl=impl, k=k,
+                us_per_call=round(us), share_bytes=share,
+                derived_flops=flops, derived_hbm_bytes=hbm,
+                **_rl(flops, hbm, share),
+                vs_dense=f"{dense_us / max(us, 1e-9):.1f}x")
 
 
 BENCHES = {

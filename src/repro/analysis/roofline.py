@@ -1,11 +1,16 @@
 """Roofline report from dry-run JSONL records.
 
 Per (arch x shape x mesh): the three terms
-    t_compute    = HLO_FLOPs_per_device / peak_FLOP/s        (197 TF bf16)
-    t_memory     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
-    t_collective = collective_bytes_per_device / link_bw     (~50 GB/s)
+    t_compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    t_memory     = HLO_bytes_per_device / HBM_bw
+    t_collective = collective_bytes_per_device / link_bw
 plus the dominant term, MODEL_FLOPS = 6*N_active*D, the useful-FLOP ratio,
 and a rule-based one-liner on what would move the dominant term.
+
+The hardware constants live in ONE place — ``launch.mesh.V5E``
+(197 TF bf16 / 819 GB/s HBM / ~50 GB/s ICI); ``roofline_terms`` below is
+the single implementation of the three-term model, shared by the dry-run
+analyzer (``launch.dryrun``) and the benchmark harness (``benchmarks.run``).
 
   PYTHONPATH=src python -m repro.analysis.roofline experiments/dryrun/*.jsonl
 """
@@ -14,7 +19,31 @@ from __future__ import annotations
 import glob
 import json
 import sys
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import V5E, HardwareSpec
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float = 0.0,
+                   hw: Optional[HardwareSpec] = None) -> Dict[str, object]:
+    """The three-term roofline model for one program / one device.
+
+    Returns ``t_compute`` / ``t_memory`` / ``t_collective`` (seconds at the
+    hardware's peaks), ``t_bound`` (their max — the model's minimum
+    wall-clock), ``dominant`` (bottleneck attribution: which term binds)
+    and ``roofline_frac`` (t_compute / t_bound — 1.0 means the program sits
+    on the compute roofline; below 1.0, the gap is memory/collective time).
+    """
+    hw = hw or V5E
+    t = {"t_compute": flops / hw.peak_flops_bf16,
+         "t_memory": hbm_bytes / hw.hbm_bandwidth,
+         "t_collective": coll_bytes / hw.ici_bandwidth}
+    bound = max(t.values())
+    t["t_bound"] = bound
+    t["dominant"] = max(("t_compute", "t_memory", "t_collective"),
+                        key=lambda k: t[k])
+    t["roofline_frac"] = t["t_compute"] / bound if bound > 0 else 1.0
+    return t
 
 
 def load(paths: List[str]) -> List[Dict]:

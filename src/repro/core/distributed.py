@@ -78,7 +78,7 @@ def _cvmap(spmd_axis_name=None):
 
 def make_local_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                           remat: bool = True, unroll: bool = False,
-                          spmd_client_axis=None):
+                          spmd_client_axis=None, impl=None):
     """Vmapped private-shard CE step.
 
     batch: tokens (K, B, S_tok) [+ prefix (K, B, P, pd)].
@@ -88,16 +88,20 @@ def make_local_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     shared global-norm gradient clip — and their params/opt ride through
     unchanged (the same pre-grad weighting the fused DML step uses).
     """
+    model_impl = ops.model_grad_impl(impl)
     def step(stacked_params, opt_state, tokens, prefix=None,
              part_mask=None):
         def total_loss(sp):
             if prefix is None:
                 losses, metrics = _cvmap(spmd_axis_name=spmd_client_axis)(
-                    lambda p, t: tfm.loss_fn(p, cfg, t, remat=remat, unroll=unroll)
+                    lambda p, t: tfm.loss_fn(p, cfg, t, remat=remat,
+                                             unroll=unroll, impl=model_impl)
                 )(sp, tokens)
             else:
                 losses, metrics = _cvmap(spmd_axis_name=spmd_client_axis)(
-                    lambda p, t, pe: tfm.loss_fn(p, cfg, t, pe, remat=remat, unroll=unroll)
+                    lambda p, t, pe: tfm.loss_fn(p, cfg, t, pe, remat=remat,
+                                                 unroll=unroll,
+                                                 impl=model_impl)
                 )(sp, tokens, prefix)
             pm = 1.0 if part_mask is None else jnp.asarray(part_mask,
                                                            jnp.float32)
@@ -113,22 +117,27 @@ def make_local_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     return step
 
 
-def _mutual_term(flat, temperature, sparse_k, part_mask=None):
-    """Eq. 2 term: dense (full logits gathered) or sparse top-k sharing."""
+def _mutual_term(flat, temperature, sparse_k, part_mask=None, impl=None):
+    """Eq. 2 term: dense (full logits gathered) or sparse top-k sharing.
+
+    ``impl`` routes both variants through the fused streaming kernels
+    (``ops.mutual_kl_pair`` / ``ops.sparse_mutual_kl``) on kernel impls.
+    """
     if sparse_k:
         assert part_mask is None, \
             "sparse top-k sharing + partial participation not supported yet"
         idx, logp_top = topk_predictions(
             jax.lax.stop_gradient(flat), sparse_k, temperature)
-        return sparse_mutual_kl_loss(flat, idx, logp_top, temperature)
-    return mutual_kl_loss(flat, temperature, part_mask=part_mask)
+        return sparse_mutual_kl_loss(flat, idx, logp_top, temperature,
+                                     impl=impl)
+    return mutual_kl_loss(flat, temperature, part_mask=part_mask, impl=impl)
 
 
 def make_mutual_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                      kl_weight: float = 1.0, temperature: float = 1.0,
                      remat: bool = True, ce_weight: float = 1.0,
                      unroll: bool = False, sparse_k: int = 0,
-                     spmd_client_axis=None):
+                     spmd_client_axis=None, impl=None):
     """Eq. 1 on the public batch: CE(public) + kl_weight * KLD_avg.
 
     public tokens: (B_pub, S_tok) — same data for every client (that is the
@@ -139,20 +148,24 @@ def make_mutual_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     unchanged (the AdamW schedule step is shared fleet-wide and still
     advances).
     """
+    model_impl = ops.model_grad_impl(impl)
     def step(stacked_params, opt_state, public_tokens, public_prefix=None,
              part_mask=None):
         def total_loss(sp):
             if public_prefix is None:
                 losses, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p: _public_ce_and_logits(p, cfg, public_tokens,
-                                                    None, remat, unroll))(sp)
+                                                    None, remat, unroll,
+                                                    model_impl))(sp)
             else:
                 losses, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p: _public_ce_and_logits(p, cfg, public_tokens,
-                                                    public_prefix, remat, unroll))(sp)
+                                                    public_prefix, remat,
+                                                    unroll, model_impl))(sp)
             K, B, S, V = fwd.shape
             flat = constrain(fwd.reshape(K, B * S, V), "client", None, "vocab")
-            kl = _mutual_term(flat, temperature, sparse_k, part_mask)  # (K,)
+            kl = _mutual_term(flat, temperature, sparse_k, part_mask,
+                              impl=impl)  # (K,)
             pm = 1.0 if part_mask is None else jnp.asarray(part_mask,
                                                            jnp.float32)
             total = (ce_weight * jnp.sum(losses * pm)
@@ -169,9 +182,10 @@ def make_mutual_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     return step
 
 
-def _public_ce_and_logits(params, cfg, tokens, prefix, remat, unroll=False):
+def _public_ce_and_logits(params, cfg, tokens, prefix, remat, unroll=False,
+                          impl=None):
     logits, _ = tfm.forward(params, cfg, tokens, prefix, remat=remat,
-                            unroll=unroll)
+                            unroll=unroll, impl=impl)
     P = cfg.prefix_tokens or 0
     if P:
         pred, labels = logits[:, P - 1: -1], tokens
@@ -196,31 +210,44 @@ def _mask_participation(old_params, old_opt, new_params, new_opt, part_mask):
 def make_dml_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                         kl_weight: float = 1.0, temperature: float = 1.0,
                         remat: bool = True, unroll: bool = False,
-                        sparse_k: int = 0, spmd_client_axis=None):
+                        sparse_k: int = 0, spmd_client_axis=None,
+                        impl=None):
     """One fused DML round-step: private CE + Eq. 1 on the public batch.
 
     ``part_mask`` (K,) 0/1 enables partial participation (see
-    ``make_mutual_step``)."""
+    ``make_mutual_step``).  ``impl`` is the kernel implementation the
+    population resolved at construction — threaded into the mixer forward
+    (``tfm.loss_fn``, downgraded via ``ops.model_grad_impl`` since the
+    attention/SSD kernels are forward-only) AND the Eq.-2 term (raw, its
+    kernels carry custom VJPs), never read from ambient state inside the
+    jitted step."""
+    model_impl = ops.model_grad_impl(impl)
     def step(stacked_params, opt_state, tokens, public_tokens,
              prefix=None, public_prefix=None, part_mask=None):
         def total_loss(sp):
             if prefix is None:
                 priv, pm = _cvmap(spmd_axis_name=spmd_client_axis)(
-                    lambda p, t: tfm.loss_fn(p, cfg, t, remat=remat, unroll=unroll)
+                    lambda p, t: tfm.loss_fn(p, cfg, t, remat=remat,
+                                             unroll=unroll, impl=model_impl)
                 )(sp, tokens)
                 ce_pub, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p: _public_ce_and_logits(p, cfg, public_tokens,
-                                                    None, remat, unroll))(sp)
+                                                    None, remat, unroll,
+                                                    model_impl))(sp)
             else:
                 priv, pm = _cvmap(spmd_axis_name=spmd_client_axis)(
-                    lambda p, t, pe: tfm.loss_fn(p, cfg, t, pe, remat=remat, unroll=unroll)
+                    lambda p, t, pe: tfm.loss_fn(p, cfg, t, pe, remat=remat,
+                                                 unroll=unroll,
+                                                 impl=model_impl)
                 )(sp, tokens, prefix)
                 ce_pub, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p: _public_ce_and_logits(p, cfg, public_tokens,
-                                                    public_prefix, remat, unroll))(sp)
+                                                    public_prefix, remat,
+                                                    unroll, model_impl))(sp)
             K, B, S, V = fwd.shape
             flat = constrain(fwd.reshape(K, B * S, V), "client", None, "vocab")
-            kl = _mutual_term(flat, temperature, sparse_k, part_mask)
+            kl = _mutual_term(flat, temperature, sparse_k, part_mask,
+                              impl=impl)
             w = 1.0 if part_mask is None else jnp.asarray(part_mask,
                                                           jnp.float32)
             total = (jnp.sum(priv * w) + jnp.sum(ce_pub * w)
@@ -270,6 +297,7 @@ def make_sharded_dml_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
     k_loc, k_pad = stacking.client_layout(n_clients, n_dev)
     spec = stacking.client_spec()
     opt_noclip = dataclasses.replace(opt_cfg, clip_norm=None)
+    model_impl = ops.model_grad_impl(impl)
 
     def body(params, opt, tokens, public_tokens, pm_full):
         gids = stacking.local_client_ids(n_clients, n_dev)
@@ -279,10 +307,12 @@ def make_sharded_dml_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
         def total_loss(sp):
             priv, _ = jax.vmap(
                 lambda p, t: tfm.loss_fn(p, cfg, t, remat=remat,
-                                         unroll=unroll))(sp, tokens)
+                                         unroll=unroll,
+                                         impl=model_impl))(sp, tokens)
             ce_pub, fwd = jax.vmap(
                 lambda p: _public_ce_and_logits(p, cfg, public_tokens,
-                                                None, remat, unroll))(sp)
+                                                None, remat, unroll,
+                                                model_impl))(sp)
             K_l, B, S, V = fwd.shape
             flat = fwd.reshape(K_l, B * S, V)
             gathered = stacking.gather_clients(

@@ -78,14 +78,17 @@ def mutual_kl_terms(live_logits, fixed_logits, temperature: float = 1.0,
 
 
 def mutual_kl_loss(all_logits, temperature: float = 1.0,
-                   stop_grad_others: bool = True, part_mask=None):
+                   stop_grad_others: bool = True, part_mask=None,
+                   impl=None):
     """Per-client mean Eq.-2 loss from a live stacked logits tensor.
 
     all_logits: (K, B, V) (flatten (B, S) upstream).  Returns (K,) scalars.
+    ``impl`` routes the Eq.-2 term through the fused streaming kernel
+    (see ``mutual_kl_terms``).
     """
     fixed = jax.lax.stop_gradient(all_logits) if stop_grad_others else all_logits
     terms = mutual_kl_terms(all_logits, fixed, temperature,
-                            part_mask=part_mask)
+                            part_mask=part_mask, impl=impl)
     return jnp.mean(terms, axis=-1)
 
 
@@ -178,7 +181,7 @@ def topk_predictions(logits, k: int, temperature: float = 1.0):
 
 
 def sparse_mutual_kl_loss(live_logits, idx, logp_top,
-                          temperature: float = 1.0):
+                          temperature: float = 1.0, impl=None):
     """Eq. 2 against RECEIVED sparse predictions.
 
     live_logits: (K, B, V) — local, differentiable.
@@ -188,11 +191,24 @@ def sparse_mutual_kl_loss(live_logits, idx, logp_top,
         KL_ij = -H(P_i) - c_j (1 - s_ij) - sum_t p_i[idx_j,t] logp_j[t]
     where s_ij = sum_t p_i[idx_j,t] and c_j = log(residual_j / (V - k)).
     Returns (K,) per-client means over B.
+
+    ``impl`` (default: ``ops.get_impl()``): 'ref' keeps the plain-JAX graph
+    below with its explicit SPMD sharding constraints (AD-derived
+    gradients); kernel impls route through the fused top-k-gather +
+    streaming-softmax Pallas kernel (``ops.sparse_mutual_kl``) whose
+    custom-VJP backward streams over vocab blocks — per-round FLOPs/HBM
+    traffic then scale with k, not V.
     """
     K, B, V = live_logits.shape
     k = idx.shape[-1]
+    impl = impl or ops.get_impl()
     idx = jax.lax.stop_gradient(idx)
     logp_top = jax.lax.stop_gradient(logp_top.astype(jnp.float32))
+    if impl != "ref":
+        pair_w = (1.0 - jnp.eye(K, dtype=jnp.float32)) / max(K - 1, 1)
+        terms = ops.sparse_mutual_kl(live_logits, idx, logp_top, pair_w,
+                                     temperature=temperature, impl=impl)
+        return jnp.mean(terms, axis=-1)
     lp_live = jax.nn.log_softmax(
         live_logits.astype(jnp.float32) / temperature, axis=-1)
     p_live = jnp.exp(lp_live)                            # (K,B,V)
@@ -225,7 +241,7 @@ def sparse_mutual_kl_loss(live_logits, idx, logp_top,
 
 
 def sparse_kl_to_received(live_logits, idx, logp_top,
-                          temperature: float = 1.0):
+                          temperature: float = 1.0, impl=None):
     """Eq. 2 for ONE client against RECEIVED sparse (top-k) predictions.
 
     live_logits: (B, V) — local, differentiable.
@@ -240,11 +256,21 @@ def sparse_kl_to_received(live_logits, idx, logp_top,
     heterogeneous engine descends (clients with different pytrees cannot
     be stacked, so each computes Eq. 2 against the sparse sets that
     actually crossed the client boundary).
+
+    ``impl`` routes kernel impls through ``ops.sparse_mutual_kl`` with
+    Kl = 1 and uniform 1/J weights — the fused gather+KL kernel.
     """
     J, B, k = idx.shape
     V = live_logits.shape[-1]
+    impl = impl or ops.get_impl()
     idx = jax.lax.stop_gradient(idx)
     logp_top = jax.lax.stop_gradient(logp_top.astype(jnp.float32))
+    if impl != "ref":
+        pair_w = jnp.full((1, J), 1.0 / max(J, 1), jnp.float32)
+        terms = ops.sparse_mutual_kl(live_logits[None], idx, logp_top,
+                                     pair_w, temperature=temperature,
+                                     impl=impl)
+        return terms[0]
     lp_live = jax.nn.log_softmax(
         live_logits.astype(jnp.float32) / temperature, axis=-1)
     p_live = jnp.exp(lp_live)                            # (B,V)

@@ -39,6 +39,7 @@ from repro.core.mutual import (kl_to_received, sparse_kl_to_received,
 from repro.core.populations.base import Population, broadcast_mask_counts
 from repro.data.federated import FoldScheduler, round_batch_indices
 from repro.data.synthetic import make_token_stream
+from repro.kernels import ops
 from repro.models import ClientModel, get_client_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
@@ -90,8 +91,12 @@ class HeteroClients(Population):
                  labels: np.ndarray, rounds: int = 4,
                  local_epochs: int = 1, batch_size: int = 4,
                  public_batch: int = 4, lr: float = 3e-3, seed: int = 0,
-                 mutual_updates_per_round: int = 1, reduced: bool = True):
+                 mutual_updates_per_round: int = 1, reduced: bool = True,
+                 kernel_impl: str = "auto"):
         self.archs = tuple(archs)
+        # resolved once; the sparse mutual programs bake it into their jit
+        # caches (the per-arch model forwards keep their own defaults)
+        self.impl = ops.resolve_impl(kernel_impl)
         self.data = data
         self.labels = labels
         self.n_clients = len(self.archs)
@@ -213,12 +218,13 @@ class HeteroClients(Population):
     def _sparse_prog(self, arch: str, kl_weight: float, k: int) -> Dict:
         """Top-k variants: publish (indices, log-probs) of the k most
         likely classes; descend Eq. 1 against the received sparse sets."""
-        cache_key = (arch, kl_weight, "sparse", k)
+        cache_key = (arch, kl_weight, "sparse", k, self.impl)
         if cache_key in self._progs:
             return self._progs[cache_key]
         cm = self._models[arch]
         opt_cfg = self.opt_cfg
         kl_w = kl_weight
+        impl = self.impl
 
         @jax.jit
         def share_topk(params, inputs):
@@ -228,7 +234,8 @@ class HeteroClients(Population):
         def mutual_sparse(params, opt, inputs, labs, idx, logp, key):
             def loss_fn(p):
                 ce, live = cm.public_ce_and_logits(p, inputs, labs, key)
-                kl = jnp.mean(sparse_kl_to_received(live, idx, logp))
+                kl = jnp.mean(sparse_kl_to_received(live, idx, logp,
+                                                    impl=impl))
                 return ce + kl_w * kl, (ce, kl)
             (_, (ce, kl)), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params)

@@ -29,6 +29,7 @@ from repro.core import stacking
 from repro.core.async_fl import layer_schedule
 from repro.core.populations.base import Population, broadcast_mask_counts
 from repro.data.synthetic import make_token_stream
+from repro.kernels import ops
 from repro.models import transformer as tfm
 from repro.optim import AdamWConfig
 
@@ -43,7 +44,7 @@ class LMClients(Population):
 
     def __init__(self, cfg, n_clients: int = 2, rounds: int = 20,
                  batch: int = 4, seq: int = 64, lr: float = 1e-3,
-                 seed: int = 0, mesh=None):
+                 seed: int = 0, mesh=None, kernel_impl: str = "auto"):
         self.cfg = cfg
         self.n_clients = n_clients
         self.rounds = rounds
@@ -51,6 +52,11 @@ class LMClients(Population):
         self.seq = seq
         self.seed = seed
         self.mesh = mesh
+        # kernel impl policy is resolved ONCE here ("auto" -> pallas on TPU,
+        # ref elsewhere, REPRO_KERNEL_IMPL overrides) and threaded through
+        # every step factory as a plain argument — the jitted hot path never
+        # reads the ambient ops.get_impl() state
+        self.impl = ops.resolve_impl(kernel_impl)
         self.opt_cfg = AdamWConfig(lr=lr, warmup=5, total_steps=rounds)
         key = jax.random.PRNGKey(seed)
         self.client_params = D.stacked_init(key, cfg, n_clients)
@@ -103,23 +109,24 @@ class LMClients(Population):
 
     # -- cached jitted steps ----------------------------------------------
     def _dml_step(self, kl_weight: float, sparse_k: int):
-        key = ("dml", kl_weight, sparse_k, self.mesh is not None)
+        key = ("dml", kl_weight, sparse_k, self.mesh is not None, self.impl)
         if key not in self._steps:
             if self.mesh is not None:
                 self._steps[key] = jax.jit(D.make_sharded_dml_step(
                     self.cfg, self.opt_cfg, self.mesh, self.n_clients,
-                    kl_weight=kl_weight))
+                    kl_weight=kl_weight, impl=self.impl))
             else:
                 self._steps[key] = jax.jit(D.make_dml_train_step(
                     self.cfg, self.opt_cfg, kl_weight=kl_weight,
-                    sparse_k=sparse_k))
+                    sparse_k=sparse_k, impl=self.impl))
         return self._steps[key]
 
     def _local_step(self):
-        if "local" not in self._steps:
-            self._steps["local"] = jax.jit(D.make_local_train_step(
-                self.cfg, self.opt_cfg))
-        return self._steps["local"]
+        key = ("local", self.impl)
+        if key not in self._steps:
+            self._steps[key] = jax.jit(D.make_local_train_step(
+                self.cfg, self.opt_cfg, impl=self.impl))
+        return self._steps[key]
 
     # -- strategy capabilities --------------------------------------------
     def local_phase(self, r: int, part: List[int], pm) -> List[float]:
@@ -221,7 +228,8 @@ class LMClients(Population):
             seed=777_000 + self.seed, domain=self.n_clients)[:, :self.seq])
         if "eval" not in self._steps:
             self._steps["eval"] = jax.jit(jax.vmap(
-                lambda p, t, pe: tfm.loss_fn(p, self.cfg, t, pe)[0],
+                lambda p, t, pe: tfm.loss_fn(p, self.cfg, t, pe,
+                                             impl=self.impl)[0],
                 in_axes=(0, None, None)))
         losses = self._steps["eval"](self.client_params, toks,
                                      self._prefix(777_000, self.batch))

@@ -6,45 +6,95 @@ impl values:
   - "interpret": Pallas kernel body interpreted on CPU (correctness tests)
   - "pallas":    compiled Pallas TPU kernel (the production target)
 
-Default comes from REPRO_KERNEL_IMPL or "ref"; override per-scope with
-``use_impl("interpret")``.
+Default comes from REPRO_KERNEL_IMPL or "ref"; tests/tools may override
+per-scope with ``use_impl("interpret")``.
+
+Production call sites do NOT rely on this ambient state: populations resolve
+an impl once at construction (``resolve_impl``) and thread it through the
+step factories as a plain argument.  ``use_impl`` exists for tests and the
+dry-run only — the old thread-local version leaked inside jitted traces
+(``lax.map`` chunking dispatches the body on worker threads that never saw
+the override and silently fell back to the env default), so the override is
+now a module-global set/restored by the context manager.
 """
 from __future__ import annotations
 
 import contextlib
 import os
-import threading
 from typing import Optional
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.kl_mutual import kl_mutual as _kl_mutual_pallas
 from repro.kernels.kl_mutual import kl_mutual_pair as _kl_mutual_pair
+from repro.kernels.sparse_kl import sparse_kl_topk as _sparse_kl_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
-_local = threading.local()
+IMPLS = ("ref", "interpret", "pallas", "xla_flash")
+
+_override: Optional[str] = None
 
 
 def get_impl() -> str:
-    return getattr(_local, "impl", os.environ.get("REPRO_KERNEL_IMPL", "ref"))
+    return _override or os.environ.get("REPRO_KERNEL_IMPL", "ref")
 
 
 def set_impl(impl: str) -> None:
-    assert impl in ("ref", "interpret", "pallas", "xla_flash"), impl
-    _local.impl = impl
+    global _override
+    assert impl in IMPLS, impl
+    _override = impl
 
 
 @contextlib.contextmanager
 def use_impl(impl: str):
-    old = get_impl()
+    """Scoped ambient override — TESTS AND TOOLING ONLY (see module doc)."""
+    global _override
+    old = _override
     set_impl(impl)
     try:
         yield
     finally:
-        set_impl(old)
+        _override = old
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """Resolve the kernel-impl policy ONCE, at construction time.
+
+    Priority: explicit value > REPRO_KERNEL_IMPL env > backend default —
+    ``pallas`` when running on TPU, ``ref`` (the XLA-native oracle graph)
+    everywhere else.  ``None``/"auto" defers to env/backend.  The resolved
+    string is what populations bake into their jit caches and pass down the
+    step factories, so the hot path never reads ambient state.
+    """
+    if impl and impl != "auto":
+        assert impl in IMPLS, impl
+        return impl
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        assert env in IMPLS, env
+        return env
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 # ---------------------------------------------------------------------------
+
+def model_grad_impl(impl: Optional[str]) -> Optional[str]:
+    """Downgrade an impl policy for DIFFERENTIATED model forwards.
+
+    The attention/SSD Pallas kernels are forward-only today (no custom
+    VJP — they serve eval/prefill/decode); the mutual-KL and sparse-KL
+    kernels DO carry streaming custom-VJP backwards.  Training step
+    factories therefore route ``model_grad_impl(impl)`` into the model
+    forward they differentiate and the raw ``impl`` into the Eq.-2 term:
+    ``pallas`` falls back to the differentiable online-softmax XLA
+    attention variant (``xla_flash``; SSD treats it as the oracle),
+    ``interpret`` to the oracle graphs.
+    """
+    if impl in ("interpret", "pallas"):
+        return "xla_flash" if impl == "pallas" else "ref"
+    return impl
+
 
 def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
               positions_q=None, positions_k=None, impl: Optional[str] = None):
@@ -92,11 +142,33 @@ def mutual_kl_pair(live, fixed, pair_w, *, temperature: float = 1.0,
                            interpret=(impl == "interpret"))
 
 
+def sparse_mutual_kl(live, idx, logp_top, pair_w, *,
+                     temperature: float = 1.0, impl: Optional[str] = None):
+    """Pair-weighted Eq. 2 against RECEIVED sparse (top-k) predictions.
+
+    live (Kl, B, V) x idx/logp_top (J, B, k) with (Kl, J) weights ->
+    (Kl, B).  DIFFERENTIABLE on the live side: kernel impls fuse the top-k
+    gather with a streaming softmax/entropy pass (``kernels.sparse_kl``)
+    and carry a custom VJP whose backward streams over vocab blocks; 'ref'
+    is the plain-JAX oracle graph (AD-derived gradients).  The SparseDML
+    combine hot path — ``core.mutual.sparse_mutual_kl_loss`` and
+    ``core.mutual.sparse_kl_to_received`` route here."""
+    impl = impl or get_impl()
+    if impl == "ref":
+        return ref.sparse_kl_pair(live, idx, logp_top, pair_w,
+                                  temperature=temperature)
+    return _sparse_kl_pallas(live, idx, logp_top, pair_w,
+                             temperature=temperature,
+                             interpret=(impl == "interpret"))
+
+
 def ssd(x, dt, A, B_mat, C_mat, *, chunk: int = 256, initial_state=None,
         impl: Optional[str] = None):
     """Mamba2 SSD scan -> (y, final_state)."""
     impl = impl or get_impl()
-    if impl == "ref" or initial_state is not None:
+    # "xla_flash" is an attention-only variant; SSD has no XLA-flash
+    # formulation, so the policy degrades to the oracle here
+    if impl in ("ref", "xla_flash") or initial_state is not None:
         return ref.ssd(x, dt, A, B_mat, C_mat, chunk=chunk,
                        initial_state=initial_state)
     return _ssd_pallas(x, dt, A, B_mat, C_mat, chunk=chunk,

@@ -147,6 +147,43 @@ def mutual_kl_pair(live, fixed, pair_w, temperature: float = 1.0):
     return jnp.sum(kl * pair_w.astype(jnp.float32)[:, :, None], axis=1)
 
 
+def sparse_kl_pair(live, idx, logp_top, pair_w, temperature: float = 1.0):
+    """Pair-weighted Eq. 2 against RECEIVED sparse (top-k) predictions.
+
+    live: (Kl, B, V) — differentiable side.  idx, logp_top: (J, B, k) — the
+    shared top-k sets.  pair_w: (Kl, J) weights.  Returns (Kl, B):
+
+        out[i, b] = sum_j w[i, j] * KL(P_i(b) || ~Q_j(b))
+
+    with ~Q_j = top-k mass of Q_j + uniform tail over the V - k residual
+    (the SparseDML reconstruction), i.e. per pair
+
+        KL_ij = -H(P_i) - c_j (1 - s_ij) - sum_t p_i[idx_j,t] logp_j[t]
+
+    where s_ij = sum_t p_i[idx_j,t] and c_j = log(residual_j / (V - k)).
+    This is the semantic ground truth for ``kernels.sparse_kl``; both
+    ``core.mutual.sparse_mutual_kl_loss`` (w = (1-I)/(K-1), mean over B)
+    and ``core.mutual.sparse_kl_to_received`` (Kl = 1, w = 1/J) reduce
+    to it.
+    """
+    Kl, B, V = live.shape
+    k = idx.shape[-1]
+    lp_live = jax.nn.log_softmax(
+        live.astype(jnp.float32) / temperature, axis=-1)
+    p_live = jnp.exp(lp_live)                            # (Kl,B,V)
+    neg_h = jnp.sum(p_live * lp_live, axis=-1)           # (Kl,B)
+    logp = logp_top.astype(jnp.float32)                  # (J,B,k)
+    residual = jnp.clip(1.0 - jnp.sum(jnp.exp(logp), axis=-1), 1e-9, 1.0)
+    c = jnp.log(residual / max(V - k, 1))                # (J,B)
+    # p_at[i, j, b, t] = p_live[i, b, idx[j, b, t]]
+    p_at = jax.vmap(lambda pi: jax.vmap(
+        lambda ij: jnp.take_along_axis(pi, ij, axis=-1))(idx))(p_live)
+    s = jnp.sum(p_at, axis=-1)                           # (Kl,J,B)
+    cross = jnp.sum(p_at * logp[None], axis=-1)          # (Kl,J,B)
+    kl = neg_h[:, None, :] - c[None] * (1.0 - s) - cross
+    return jnp.einsum("ij,ijb->ib", pair_w.astype(jnp.float32), kl)
+
+
 def bernoulli_mutual_kl(probs):
     """Eq. 2 for the paper's sigmoid binary head.  probs: (K, B) in (0,1)."""
     K = probs.shape[0]

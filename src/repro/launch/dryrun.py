@@ -29,7 +29,7 @@ from repro import sharding as shd
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.core import distributed as dml
 from repro.launch import specs as S
-from repro.launch.mesh import V5E, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (decode_window, make_decode_step,
                                 make_prefill_step, make_train_step)
 from repro.optim import AdamWConfig
@@ -379,12 +379,12 @@ def run_case(arch: str, shape_name: str, mesh_kind: str,
         rec["bytes_per_device"] = costs["bytes"]
         rec["collectives"] = costs["coll"]
 
-        # 3) roofline terms (seconds), per the task formulas
-        rec["t_compute"] = rec["flops_per_device"] / V5E.peak_flops_bf16
-        rec["t_memory"] = rec["bytes_per_device"] / V5E.hbm_bandwidth
-        rec["t_collective"] = rec["collectives"]["total"] / V5E.ici_bandwidth
-        rec["dominant"] = max(
-            ("t_compute", "t_memory", "t_collective"), key=lambda k: rec[k])
+        # 3) roofline terms (seconds) — the shared three-term model
+        from repro.analysis.roofline import roofline_terms
+        rl = roofline_terms(rec["flops_per_device"], rec["bytes_per_device"],
+                            rec["collectives"]["total"])
+        rec.update({k: rl[k] for k in ("t_compute", "t_memory",
+                                       "t_collective", "dominant")})
 
         # 4) useful-FLOP ratio
         tokens = shape.global_batch * (shape.seq_len

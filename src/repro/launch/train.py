@@ -64,7 +64,8 @@ def _run_hetero(args) -> int:
     t0 = time.time()
     population = HeteroClients(
         archs, pool, labels, rounds=args.rounds, batch_size=args.batch,
-        public_batch=max(1, args.batch // 2), lr=args.lr, seed=args.seed)
+        public_batch=max(1, args.batch // 2), lr=args.lr, seed=args.seed,
+        kernel_impl=args.kernel_impl)
     fed = Federation(population, _make_strategy(args),
                      participation=args.participation)
     print(f"federating [{args.strategy}]:", ", ".join(
@@ -100,7 +101,8 @@ def _run_federated_lm(args, cfg) -> int:
     t0 = time.time()
     population = LMClients(cfg, n_clients=args.clients, rounds=args.steps,
                            batch=args.batch, seq=args.seq, lr=args.lr,
-                           seed=args.seed, mesh=mesh)
+                           seed=args.seed, mesh=mesh,
+                           kernel_impl=args.kernel_impl)
     fed = Federation(population, _make_strategy(args),
                      participation=args.participation)
     print(f"model: {cfg.name} x {args.clients} clients "
@@ -144,6 +146,12 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--kl-weight", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "ref", "interpret", "pallas",
+                             "xla_flash"],
+                    help="kernel implementation for the hot path: 'auto' "
+                         "resolves per backend (pallas on TPU, ref "
+                         "elsewhere; REPRO_KERNEL_IMPL overrides)")
     ap.add_argument("--save", default=None, help="checkpoint path")
     ap.add_argument("--mesh", default=None, metavar="clients=N",
                     help="device-shard the DML client axis over a "

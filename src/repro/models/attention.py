@@ -64,8 +64,14 @@ def _project_qkv(params, cfg: ModelConfig, x, positions):
 
 
 def attention_forward(params, cfg: ModelConfig, x, positions=None,
-                      window: Optional[int] = None):
-    """Self-attention over x (B, S, d).  window=None -> cfg.sliding_window."""
+                      window: Optional[int] = None,
+                      impl: Optional[str] = None):
+    """Self-attention over x (B, S, d).  window=None -> cfg.sliding_window.
+
+    ``impl`` selects the kernel implementation (see ``kernels.ops``);
+    None defers to the ambient default — production populations pass the
+    impl they resolved at construction.
+    """
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
@@ -75,7 +81,7 @@ def attention_forward(params, cfg: ModelConfig, x, positions=None,
     q = constrain(q, "attn_batch", "seq", "heads", None)
     k = constrain(k, "attn_batch", "seq", "kv_heads", None)
     v = constrain(v, "attn_batch", "seq", "kv_heads", None)
-    out = ops.attention(q, k, v, causal=True, window=window)
+    out = ops.attention(q, k, v, causal=True, window=window, impl=impl)
     out = constrain(out, "attn_batch", "seq", "heads", None)
     return jnp.einsum("bsnh,nhd->bsd", out, params["w_o"])
 

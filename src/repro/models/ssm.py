@@ -77,8 +77,13 @@ def _causal_conv(xBC, w, b):
     return out + b
 
 
-def mamba_forward(params, cfg: ModelConfig, u, return_state: bool = False):
-    """u: (B, S, d) -> y (B, S, d) [, (conv_state, ssm_state)]."""
+def mamba_forward(params, cfg: ModelConfig, u, return_state: bool = False,
+                  impl=None):
+    """u: (B, S, d) -> y (B, S, d) [, (conv_state, ssm_state)].
+
+    ``impl`` selects the SSD kernel implementation (see ``kernels.ops``);
+    None defers to the ambient default.
+    """
     s, di, nh, conv_ch = _dims(cfg)
     B, S, _ = u.shape
     zxbcdt = u @ params["in_proj"]
@@ -98,7 +103,7 @@ def mamba_forward(params, cfg: ModelConfig, u, return_state: bool = False):
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
     x = constrain(x, "batch", "seq", "heads", None)
-    y, state = ops.ssd(x, dt, A, Bm, Cm, chunk=s.chunk)
+    y, state = ops.ssd(x, dt, A, Bm, Cm, chunk=s.chunk, impl=impl)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * x
     y = y.reshape(B, S, di)
     y = gated_rms_norm(y, z, params["norm"], cfg.rms_eps)

@@ -112,15 +112,15 @@ def logical_axes(cfg: ModelConfig) -> Params:
 # forward (train / eval)
 
 def _apply_slot(params, cfg: ModelConfig, spec, x, positions,
-                window: Optional[int]):
+                window: Optional[int], impl: Optional[str] = None):
     aux = {"load_balance": jnp.zeros((), jnp.float32),
            "router_z": jnp.zeros((), jnp.float32)}
     h = rms_norm(x, params["norm1"], cfg.rms_eps)
     if spec.mixer == "attn":
         h = attn_mod.attention_forward(params["mixer"], cfg, h, positions,
-                                       window=window)
+                                       window=window, impl=impl)
     else:
-        h = ssm_mod.mamba_forward(params["mixer"], cfg, h)
+        h = ssm_mod.mamba_forward(params["mixer"], cfg, h, impl=impl)
     x = x + h
     if spec.ffn != "none":
         h = rms_norm(x, params["norm2"], cfg.rms_eps)
@@ -151,13 +151,15 @@ def _unembed(params, cfg: ModelConfig, x):
 
 def forward_hidden(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
                    window: Optional[int] = None, remat: bool = True,
-                   unroll: bool = False, slot_remat: bool = False):
+                   unroll: bool = False, slot_remat: bool = False,
+                   impl: Optional[str] = None):
     """Backbone only: final hidden states (pre final-norm) + aux losses.
     ``unroll`` replaces the period scan with a Python loop (exact HLO cost
     accounting in the dry-run — see launch/dryrun.py).  ``slot_remat``
     checkpoints every slot individually (multi-slot periods like Jamba's
     8-layer block otherwise keep the whole period's activations live in
-    the backward pass)."""
+    the backward pass).  ``impl`` selects the mixer kernel implementation
+    (``kernels.ops``); None defers to the ambient default."""
     x = _embed(params, cfg, tokens, prefix_emb)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
@@ -168,7 +170,8 @@ def forward_hidden(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
                    "router_z": jnp.zeros((), jnp.float32)}
         for i, spec in enumerate(cfg.period):
             def slot_fn(p, hh, spec=spec):
-                return _apply_slot(p, cfg, spec, hh, positions, window)
+                return _apply_slot(p, cfg, spec, hh, positions, window,
+                                   impl=impl)
             if slot_remat:
                 slot_fn = jax.checkpoint(slot_fn)
             h, aux = slot_fn(period_params[f"slot{i}"], h)
@@ -192,14 +195,15 @@ def forward_hidden(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
 
 def forward(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
             window: Optional[int] = None, remat: bool = True,
-            unroll: bool = False, slot_remat: bool = False):
+            unroll: bool = False, slot_remat: bool = False,
+            impl: Optional[str] = None):
     """tokens: (B, S_tok); prefix_emb: (B, P, prefix_dim) when cfg.prefix_tokens.
 
     Returns (logits (B, P+S_tok, V), aux dict of scalar reg losses).
     """
     x, aux = forward_hidden(params, cfg, tokens, prefix_emb, window=window,
                             remat=remat, unroll=unroll,
-                            slot_remat=slot_remat)
+                            slot_remat=slot_remat, impl=impl)
     return _unembed(params, cfg, x), aux
 
 
@@ -249,17 +253,18 @@ def chunked_ce(x, head, labels, n_chunks: int = 16):
 def loss_fn(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
             window: Optional[int] = None, remat: bool = True,
             unroll: bool = False, ce_impl: str = "dense",
-            slot_remat: bool = False):
+            slot_remat: bool = False, impl: Optional[str] = None):
     """Next-token cross-entropy (+ MoE aux).  Returns (loss, metrics).
 
     ce_impl='chunked' streams the vocab dimension (never materialises the
     (B, S, V) logits) — the beyond-paper memory optimisation from §Perf.
+    ``impl`` selects the mixer kernel implementation (``kernels.ops``).
     """
     P = cfg.prefix_tokens if cfg.prefix_tokens else 0
     if ce_impl == "chunked":
         x, aux = forward_hidden(params, cfg, tokens, prefix_emb,
                                 window=window, remat=remat, unroll=unroll,
-                                slot_remat=slot_remat)
+                                slot_remat=slot_remat, impl=impl)
         x = rms_norm(x, params["final_norm"], cfg.rms_eps)
         head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
         if P:
@@ -270,7 +275,7 @@ def loss_fn(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
     else:
         logits, aux = forward(params, cfg, tokens, prefix_emb, window=window,
                               remat=remat, unroll=unroll,
-                              slot_remat=slot_remat)
+                              slot_remat=slot_remat, impl=impl)
         if P:
             pred = logits[:, P - 1: -1]      # positions predicting tokens[0:]
             labels = tokens

@@ -1,0 +1,103 @@
+"""analysis.roofline: the shared three-term model + the report CLI."""
+import json
+
+import pytest
+
+from repro.analysis import roofline as R
+from repro.launch.mesh import V5E, HardwareSpec
+
+
+# ---------------------------------------------------------------------------
+# roofline_terms — the single implementation shared by dryrun + benchmarks
+
+def test_terms_compute_bound():
+    t = R.roofline_terms(flops=V5E.peak_flops_bf16, hbm_bytes=1.0)
+    assert t["t_compute"] == pytest.approx(1.0)
+    assert t["dominant"] == "t_compute"
+    assert t["t_bound"] == pytest.approx(1.0)
+    assert t["roofline_frac"] == pytest.approx(1.0)
+
+
+def test_terms_memory_bound():
+    t = R.roofline_terms(flops=V5E.peak_flops_bf16,   # 1 s of compute
+                         hbm_bytes=4 * V5E.hbm_bandwidth)  # 4 s of HBM
+    assert t["dominant"] == "t_memory"
+    assert t["t_memory"] == pytest.approx(4.0)
+    assert t["roofline_frac"] == pytest.approx(0.25)
+
+
+def test_terms_collective_bound_and_zero():
+    t = R.roofline_terms(0.0, 0.0, coll_bytes=2 * V5E.ici_bandwidth)
+    assert t["dominant"] == "t_collective"
+    assert t["t_collective"] == pytest.approx(2.0)
+    assert t["roofline_frac"] == pytest.approx(0.0)
+    z = R.roofline_terms(0.0, 0.0)
+    assert z["t_bound"] == 0.0 and z["roofline_frac"] == 1.0
+
+
+def test_terms_custom_hardware():
+    hw = HardwareSpec(name="toy", peak_flops_bf16=100.0, hbm_bandwidth=10.0,
+                      ici_bandwidth=1.0)
+    t = R.roofline_terms(200.0, 50.0, 1.0, hw=hw)
+    assert t["t_compute"] == pytest.approx(2.0)
+    assert t["t_memory"] == pytest.approx(5.0)
+    assert t["t_collective"] == pytest.approx(1.0)
+    assert t["dominant"] == "t_memory"
+
+
+def test_constants_single_source():
+    """The module must not re-declare hardware peaks — launch.mesh owns
+    them (the dedup contract)."""
+    assert R.V5E is V5E
+
+
+# ---------------------------------------------------------------------------
+# report pipeline smoke: load -> table -> pick_hillclimb -> main
+
+def _rec(arch="qwen3-4b", shape="train_4k", mesh="single",
+         method="standard", **kw):
+    base = dict(arch=arch, shape=shape, mesh=mesh, method=method,
+                status="ok", flops_per_device=1e15, bytes_per_device=1e12,
+                collectives={"total": 1e9, "pod_axis": 0},
+                model_flops=6e14, useful_flop_ratio=0.6,
+                peak_bytes=8 * 2**30)
+    base.update(kw)
+    rl = R.roofline_terms(base["flops_per_device"], base["bytes_per_device"],
+                          base["collectives"]["total"])
+    base.setdefault("t_compute", rl["t_compute"])
+    base.setdefault("t_memory", rl["t_memory"])
+    base.setdefault("t_collective", rl["t_collective"])
+    base.setdefault("dominant", rl["dominant"])
+    return base
+
+
+def test_load_dedups_reruns(tmp_path):
+    p = tmp_path / "dry.jsonl"
+    first = _rec(useful_flop_ratio=0.1)
+    second = _rec(useful_flop_ratio=0.9)
+    p.write_text(json.dumps(first) + "\n" + json.dumps(second) + "\n")
+    recs = R.load([str(p)])
+    assert len(recs) == 1 and recs[0]["useful_flop_ratio"] == 0.9
+
+
+def test_table_and_main_smoke(tmp_path, capsys):
+    p = tmp_path / "dry.jsonl"
+    rows = [_rec(),
+            _rec(arch="mamba2-780m", shape="decode_32k",
+                 flops_per_device=1e13, bytes_per_device=5e12),
+            _rec(method="dml", mesh="multi",
+                 collectives={"total": 5e11, "pod_axis": 1e9}),
+            _rec(arch="dbrx-132b", status="fail", error="OOM")]
+    p.write_text("".join(json.dumps(r) + "\n" for r in rows))
+    recs = R.load([str(p)])
+    out = R.table(recs)
+    assert "| arch |" in out and "qwen3-4b" in out and "FAIL" in out
+    picks = R.pick_hillclimb(recs)
+    assert "worst_fraction" in picks and "paper_technique" in picks
+    assert R.main([str(p)]) == 0
+    printed = capsys.readouterr().out
+    assert "Roofline" in printed and "Hillclimb picks" in printed
+
+
+def test_main_no_records(tmp_path, capsys):
+    assert R.main([str(tmp_path / "missing*.jsonl")]) == 1
