@@ -5,7 +5,9 @@ Two jobs, one tool:
   1. STRUCTURAL invariants of a single results dir (always checked):
      bitwise-parity flags true, sparse share_bytes < dense, the sparse
      mutual-step series monotone in k (wall-clock with a noise factor,
-     the derived FLOP/HBM/wire models strictly).
+     the derived FLOP/HBM/wire models strictly), and the privacy
+     battery's orderings (fedavg leaks most, epsilon monotone in
+     sigma/releases, robust combiners beat poisoned plain DML).
   2. REGRESSION vs a committed baseline (when --current is given):
      deterministic tracked metrics (comm bytes, dispatch counts, derived
      FLOP/byte models) may not grow more than --tol (default 20%).
@@ -38,12 +40,18 @@ DETERMINISTIC = {
     "comm_llm": ["fedavg_bytes", "dml_dense_bytes", "dml_top64_bytes"],
     "kernels": ["derived_flops", "derived_hbm_bytes"],
     "kernels_sparse": ["derived_flops", "derived_hbm_bytes", "share_bytes"],
+    "privacy": ["comm_bytes"],
+    "privacy_dp": ["epsilon"],        # analytic accountant math — exact
 }
-# machine-dependent columns: never gated, reported as info
+# machine-dependent columns: never gated, reported as info.  The privacy
+# battery's accuracy/advantage columns are run-volatile (tiny synthetic
+# tasks), so only their ORDERING is gated — see check_structural.
 WALLCLOCK = {
     "kernels": ["us_per_call"],
     "kernels_sparse": ["us_per_call"],
     "sharded": ["compile_round_s", "steady_round_s"],
+    "privacy": ["accuracy_pct", "mia_advantage", "epsilon"],
+    "privacy_robust": ["honest_accuracy_pct"],
 }
 # columns that must be truthy in the CURRENT run (parity guarantees)
 MUST_BE_TRUE = {
@@ -87,6 +95,7 @@ def check_structural(benches: Dict[str, dict], errors: List[str]) -> None:
                         errors.append(f"{bench}/sharded: device_count="
                                       f"{r.get('device_count')} not bitwise "
                                       f"vs unsharded ({ok!r})")
+    _check_privacy(benches, errors)
     ks = benches.get("kernels", {}).get("sections", {}).get("kernels_sparse")
     if ks:
         impls = sorted({r["impl"] for r in ks})
@@ -120,6 +129,56 @@ def check_structural(benches: Dict[str, dict], errors: List[str]) -> None:
                 errors.append(f"kernels_sparse[{impl}]: us_per_call not "
                               f"monotone as k shrinks (k pairs {bad}, "
                               f"us={us}, noise factor {NOISE})")
+
+
+def _check_privacy(benches: Dict[str, dict], errors: List[str]) -> None:
+    """Ordering invariants of the privacy battery — the claims the table
+    exists to make, checked on whatever run is in front of us."""
+    secs = benches.get("privacy", {}).get("sections", {})
+    pv = {r["strategy"]: r for r in secs.get("privacy", [])}
+    if pv:
+        need = {"fedavg", "dml", "dp-dml"}
+        if not need <= set(pv):
+            errors.append(f"privacy: missing strategies {need - set(pv)}")
+        else:
+            fa = float(pv["fedavg"]["mia_advantage"])
+            dml = float(pv["dml"]["mia_advantage"])
+            dp = float(pv["dp-dml"]["mia_advantage"])
+            if fa <= dml:
+                errors.append("privacy: leakage ordering violated — fedavg "
+                              f"MIA advantage {fa} <= dml {dml}")
+            if dp > dml + 0.1:
+                errors.append("privacy: dp-dml MIA advantage "
+                              f"{dp} exceeds dml {dml} beyond probe noise")
+    dprows = secs.get("privacy_dp", [])
+    single = sorted((r for r in dprows if int(r["releases"]) == 1),
+                    key=lambda r: float(r["sigma"]))
+    eps = [float(r["epsilon"]) for r in single]
+    if any(b >= a for a, b in zip(eps, eps[1:])):
+        errors.append("privacy_dp: epsilon not strictly decreasing in "
+                      f"sigma: {eps}")
+    comp = sorted((r for r in dprows if float(r["sigma"]) == 1.0
+                   and int(r["releases"]) > 1),
+                  key=lambda r: int(r["releases"]))
+    ceps = [float(r["epsilon"]) for r in comp]
+    if any(b <= a for a, b in zip(ceps, ceps[1:])):
+        errors.append("privacy_dp: epsilon not increasing in composed "
+                      f"releases: {ceps}")
+    rb = {(r["strategy"], r["attack"]): float(r["honest_accuracy_pct"])
+          for r in secs.get("privacy_robust", [])}
+    if rb:
+        clean = rb.get(("dml", "none"))
+        pois = rb.get(("dml", "collude"))
+        if clean is not None and pois is not None:
+            if pois > clean - 10.0:
+                errors.append("privacy_robust: colluder did not degrade "
+                              f"plain dml (clean {clean} -> {pois})")
+            for s in ("trimmed-dml", "median-dml"):
+                acc = rb.get((s, "collude"))
+                if acc is not None and acc < pois + 10.0:
+                    errors.append(f"privacy_robust: {s} under attack "
+                                  f"({acc}) not better than poisoned dml "
+                                  f"({pois})")
 
 
 def check_regression(base: Dict[str, dict], cur: Dict[str, dict],

@@ -13,6 +13,10 @@
   bench_kernels  kernel wrappers (us_per_call + FLOP/byte model + roofline
                  attribution) and the dense-vs-sparse mutual step vs k
                  (the fused top-k sparse-KL kernel's perf claim)
+  bench_privacy  privacy & robustness battery: comm/accuracy/epsilon/
+                 MIA-advantage per strategy, the accountant's analytic
+                 epsilon curve, and honest accuracy under a colluding
+                 client for plain vs trimmed/median DML
 
 Output: CSV-ish lines on stdout (``name,col,col,...``) AND a
 machine-readable ``BENCH_<table>.json`` per bench next to them (--out-dir,
@@ -461,6 +465,147 @@ def bench_kernels() -> None:
                 vs_dense=f"{dense_us / max(us, 1e-9):.1f}x")
 
 
+def bench_privacy() -> None:
+    """Privacy & robustness battery (ISSUE 7): what each sharing strategy
+    costs on the wire, what it gives up to a membership-inference
+    adversary, what (eps, delta) the DP variant certifies, and how the
+    robust combiners hold up under a colluding client.
+
+      privacy         strategy,comm_bytes,accuracy_pct,epsilon,
+                      mia_advantage — comm is gated deterministically;
+                      accuracy/advantage/epsilon are reported (volatile)
+                      but their ORDERING is a structural invariant
+                      (fedavg leaks most, dp-dml never more than dml)
+      privacy_dp      the analytic accountant curve: epsilon vs sigma and
+                      vs composed releases (deterministic math, gated;
+                      epsilon strictly decreasing in sigma is structural)
+      privacy_robust  honest-client accuracy, attack x strategy: plain
+                      DML collapses under one colluder in four, the
+                      trimmed/median combiners hold (structural)
+    """
+    from repro.api import Federation, VisionClients, get_strategy
+    from repro.core import stacking
+    from repro.privacy import gaussian_epsilon
+    from repro.privacy.attacks import (collect_client_payloads, payload_mia,
+                                       weight_upload_mia)
+    vn = vn_reduced().replace(image_size=16)
+    seed = 0
+
+    # -- strategy table: comm / accuracy / epsilon / MIA advantage --------
+    print("\n# privacy: strategy,comm_bytes,accuracy_pct,epsilon,"
+          "mia_advantage")
+    K, R, BS = 4, 3, 8
+    LE, N, mia_steps = (12, 160, 200) if FAST else (20, 220, 300)
+    rng = np.random.default_rng(seed)
+    imgs = rng.normal(size=(N, 16, 16, 3)).astype(np.float32)
+    labs = (imgs.mean(axis=(1, 2, 3)) > 0).astype(np.float32)
+    rand_mask = rng.random(N) < 0.4
+    labs[rand_mask] = (rng.random(int(rand_mask.sum())) > 0.5
+                       ).astype(np.float32)
+    test = rng.normal(size=(200, 16, 16, 3)).astype(np.float32)
+    tlab = (test.mean(axis=(1, 2, 3)) > 0).astype(np.float32)
+
+    def make_pop(rounds=R):
+        return VisionClients(vn, imgs, labs, n_clients=K, rounds=rounds,
+                             local_epochs=LE, batch_size=BS, lr=0.05,
+                             seed=seed, record_payloads=True)
+
+    def mem_non(pop, client):
+        other = (client + 1) % K
+        mem = np.unique(np.concatenate([f[client] for f in pop.fold_log]))
+        non = np.setdiff1d(
+            np.unique(np.concatenate([f[other] for f in pop.fold_log])), mem)
+        return mem, non
+
+    def payload_probe(pop):
+        advs = []
+        for c in range(K):
+            mem, non = mem_non(pop, c)
+            pi, pp = collect_client_payloads(pop.payload_log, imgs, c)
+            advs.append(payload_mia(vn, pi, pp, imgs, labs, mem, non,
+                                    jax.random.PRNGKey(1000 + c),
+                                    steps=mia_steps))
+        return float(np.mean(advs))
+
+    # FedAvg upload tap: run the schedule, then one extra local phase IS
+    # the weight upload the eavesdropper scores
+    pop_fa = make_pop(rounds=R + 1)
+    fed_fa = Federation(pop_fa, get_strategy("fedavg"))
+    fed_fa.run(until=R)
+    pop_fa.begin_round(R)
+    part = list(range(K))
+    pop_fa.local_phase(R, part, pop_fa.part_mask(part))
+    advs = []
+    for c in range(K):
+        mem, non = mem_non(pop_fa, c)
+        cp = stacking.client_slice(pop_fa.client_params, c)
+        advs.append(weight_upload_mia(cp, vn, imgs, labs, mem, non))
+    acc_fa = float(np.mean(
+        fed_fa.evaluate(split=(test, tlab)).client_test_acc))
+    row("privacy", strategy="fedavg",
+        comm_bytes=fed_fa.history.total_comm_bytes,
+        accuracy_pct=round(100 * acc_fa, 2), epsilon="inf",
+        mia_advantage=round(float(np.mean(advs)), 3))
+
+    specs = [("dml", {}), ("dp-dml", {"dp_noise_multiplier": 1.0}),
+             ("trimmed-dml", {"trim": 1}), ("median-dml", {})]
+    for name, knobs in specs:
+        pop = make_pop()
+        fed = Federation(pop, get_strategy(name, **knobs))
+        fed.run()
+        acc = float(np.mean(
+            fed.evaluate(split=(test, tlab)).client_test_acc))
+        eps = (round(fed.strategy.epsilon(), 3)
+               if hasattr(fed.strategy, "epsilon") else "inf")
+        row("privacy", strategy=name,
+            comm_bytes=fed.history.total_comm_bytes,
+            accuracy_pct=round(100 * acc, 2), epsilon=eps,
+            mia_advantage=round(payload_probe(pop), 3))
+
+    # -- the accountant's analytic curve ----------------------------------
+    print("# privacy_dp: sigma,releases,delta,epsilon")
+    for sigma in (0.5, 1.0, 2.0, 4.0):
+        row("privacy_dp", sigma=sigma, releases=1, delta=1e-5,
+            epsilon=round(gaussian_epsilon(sigma, 1e-5), 6))
+    from repro.privacy import RDPAccountant
+    for releases in (3, 12, 48):
+        acc = RDPAccountant()
+        acc.step(1.0, releases=releases)
+        row("privacy_dp", sigma=1.0, releases=releases, delta=1e-5,
+            epsilon=round(acc.epsilon(1e-5), 6))
+
+    # -- Byzantine collusion vs the robust combiners ----------------------
+    print("# privacy_robust: strategy,attack,honest_accuracy_pct")
+    Rb, kl, me, le, off, lr = (3, 5.0, 3, 2, 0.3, 0.03) if FAST \
+        else (4, 5.0, 3, 2, 0.3, 0.03)
+    rngb = np.random.default_rng(seed)
+
+    def make_xy(n):
+        y = (rngb.random(n) > 0.5).astype(np.float32)
+        x = rngb.normal(size=(n, 16, 16, 3)).astype(np.float32)
+        x += (y * 2 - 1)[:, None, None, None] * off
+        return x, y
+
+    bimgs, blabs = make_xy(420)
+    btest, btlab = make_xy(300)
+    byz = {K - 1: "collude"}
+    for name, attacked, knobs in [
+            ("dml", False, {}), ("dml", True, {}),
+            ("trimmed-dml", True, {"trim": 1}), ("median-dml", True, {})]:
+        pop = VisionClients(vn, bimgs, blabs, n_clients=K, rounds=Rb,
+                            local_epochs=le, batch_size=16, seed=seed,
+                            lr=lr, byzantine=byz if attacked else None)
+        fed = Federation(pop, get_strategy(name, kl_weight=kl,
+                                           mutual_epochs=me, **knobs))
+        fed.run()
+        h = fed.evaluate(split=(btest, btlab))
+        honest = float(np.mean([a for c, a in enumerate(h.client_test_acc)
+                                if c != K - 1]))
+        row("privacy_robust", strategy=name,
+            attack="collude" if attacked else "none",
+            honest_accuracy_pct=round(100 * honest, 2))
+
+
 BENCHES = {
     "table2": bench_table2,
     "history": bench_history,
@@ -471,6 +616,7 @@ BENCHES = {
     "api": bench_api,
     "sharded": bench_sharded,
     "kernels": bench_kernels,
+    "privacy": bench_privacy,
 }
 
 

@@ -5,6 +5,7 @@ cycle-free; everything resolves through :mod:`repro.api`):
 
     repro.Federation          the strategy-composable session layer
     repro.DML / SparseDML / FedAvg / AsyncWeights     sharing strategies
+    repro.DPDML / TrimmedDML / MedianDML    privacy & robustness variants
     repro.VisionClients / HeteroClients / LMClients   client populations
     repro.checkpoint          flat-npz pytree checkpointing
 
@@ -19,6 +20,7 @@ __all__ = [
     "Federation", "History", "RoundLog",
     "Strategy", "Payload", "get_strategy",
     "DML", "SparseDML", "FedAvg", "AsyncWeights",
+    "DPDML", "TrimmedDML", "MedianDML",
     "Population", "VisionClients", "HeteroClients", "LMClients",
     "api", "checkpoint", "__version__",
 ]
@@ -26,6 +28,7 @@ __all__ = [
 _API_NAMES = {
     "Federation", "History", "RoundLog", "Strategy", "Payload",
     "get_strategy", "DML", "SparseDML", "FedAvg", "AsyncWeights",
+    "DPDML", "TrimmedDML", "MedianDML",
     "Population", "VisionClients", "HeteroClients", "LMClients",
 }
 

@@ -19,14 +19,15 @@ table from the legacy trainers.
 from repro.core.api import Federation, History, RoundLog
 from repro.core.populations import (HeteroClients, LMClients, Population,
                                     VisionClients, make_lm_pool)
-from repro.core.strategies import (DML, STRATEGIES, AsyncWeights, FedAvg,
-                                   Payload, SparseDML, Strategy,
-                                   get_strategy)
+from repro.core.strategies import (DML, DPDML, STRATEGIES, AsyncWeights,
+                                   FedAvg, MedianDML, Payload, SparseDML,
+                                   Strategy, TrimmedDML, get_strategy)
 
 __all__ = [
     "Federation", "History", "RoundLog",
     "Strategy", "Payload", "STRATEGIES", "get_strategy",
     "DML", "SparseDML", "FedAvg", "AsyncWeights",
+    "DPDML", "TrimmedDML", "MedianDML",
     "Population", "VisionClients", "HeteroClients", "LMClients",
     "make_lm_pool",
 ]

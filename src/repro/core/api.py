@@ -156,6 +156,10 @@ class Federation:
             "total_comm_bytes": self.history.total_comm_bytes,
             "rounds": [dataclasses.asdict(rl) for rl in self.history.rounds],
         }
+        # stateful strategies (e.g. DPDML's accountant + noise key) ride in
+        # the JSON meta so resume replays the identical noise/budget stream
+        if hasattr(self.strategy, "state_dict"):
+            meta["strategy_state"] = self.strategy.state_dict()
         checkpoint.save(path, self.population.state_dict(), meta)
 
     def restore_state(self, path: str) -> None:
@@ -169,6 +173,9 @@ class Federation:
                 f"checkpoint strategy {method!r} != session strategy "
                 f"{self.strategy.name!r}")
         self.population.check_meta(meta)
+        if "strategy_state" in meta and hasattr(self.strategy,
+                                                "load_state_dict"):
+            self.strategy.load_state_dict(meta["strategy_state"])
         self.population.load_state_dict(state, meta)
         self.round = int(meta["round"])
         self.history = History(

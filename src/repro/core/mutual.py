@@ -292,6 +292,117 @@ def sparse_share_bytes(n_clients: int, n_examples: int, k: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Byzantine-robust Eq.-2 combiners — beyond-paper robustness leg.
+# Plain DML averages the KL to every received prediction, so one
+# confident-wrong (poisoned) payload pulls every honest client; the robust
+# variants replace the mean with a coordinate-wise trimmed mean or median
+# CONSENSUS TARGET over the received predictions and descend
+# KL(P_i || target_i) instead.  Under no attack and t=0 the trimmed target
+# is the plain mean of predictions (close to, but not identical with, the
+# mean of KLs — KL is convex), so these are distinct Strategy variants
+# ("trimmed-dml" / "median-dml"), not drop-in reparameterisations of DML.
+
+_ABSENT = 1e9          # sort-key shift that pushes masked-out senders last
+
+
+def robust_weighted_target(shared, recv_mask, mode: str, trim: int = 1):
+    """Per-receiver robust consensus over received predictions.
+
+    shared     (K, B) values shared by every client (Bernoulli probs, or
+               any per-position scalar payload)
+    recv_mask  (K_recv, K) 0/1 — row i selects the senders receiver i
+               aggregates over (participants minus self)
+    mode       'trimmed' (drop the ``trim`` largest and smallest values
+               per position) or 'median'
+    Returns (K_recv, B) targets.
+
+    Trace-safe in the participant count: the number of live senders n_i
+    is a traced scalar per row.  When n_i - 2*trim < 1 the trimmed mean
+    FALLS BACK DETERMINISTICALLY to the untrimmed masked mean (trim
+    effectively 0) — the degenerate-participation contract the tests pin.
+    """
+    if mode not in ("trimmed", "median"):
+        raise ValueError(f"robust mode must be 'trimmed' or 'median', "
+                         f"got {mode!r}")
+    m = jnp.asarray(recv_mask, jnp.float32)            # (Kr, K)
+    vals = shared[None, :, :] + (1.0 - m)[:, :, None] * _ABSENT
+    s = jnp.sort(vals, axis=1)                         # (Kr, K, B) ascending
+    K = shared.shape[0]
+    n = jnp.sum(m, axis=1)[:, None, None]              # (Kr, 1, 1) live count
+    ranks = jnp.arange(K, dtype=jnp.float32)[None, :, None]
+    if mode == "median":
+        lo = jnp.floor((n - 1.0) / 2.0)
+        hi = jnp.floor(n / 2.0)
+        w = 0.5 * ((ranks == lo).astype(jnp.float32) +
+                   (ranks == hi).astype(jnp.float32))
+        return jnp.sum(s * w, axis=1)
+    t = jnp.asarray(float(trim), jnp.float32)
+    t_eff = jnp.where(n - 2.0 * t >= 1.0, t, 0.0)      # deterministic fallback
+    w = ((ranks >= t_eff) & (ranks < n - t_eff)).astype(jnp.float32)
+    return jnp.sum(s * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1.0)
+
+
+def robust_bernoulli_target(shared, part_mask, mode: str, trim: int = 1):
+    """(K, B) shared Bernoulli probs -> (K, B) per-client robust targets
+    (each client aggregates over the OTHER participants, as in Eq. 2)."""
+    K = shared.shape[0]
+    eye = jnp.eye(K, dtype=jnp.float32)
+    pm = jnp.ones((K,), jnp.float32) if part_mask is None \
+        else jnp.asarray(part_mask, jnp.float32)
+    recv = pm[None, :] * (1.0 - eye)
+    tgt = robust_weighted_target(shared, recv, mode, trim)
+    return jnp.clip(tgt, 1e-6, 1.0 - 1e-6)
+
+
+def bernoulli_kl_to_target(live_probs, target_probs):
+    """Elementwise Bernoulli KL(live || target): (K, B) x (K, B) -> (K, B).
+    The robust strategies descend this with the target held fixed."""
+    pi = jnp.clip(live_probs.astype(jnp.float32), 1e-6, 1 - 1e-6)
+    pj = jnp.clip(jax.lax.stop_gradient(
+        target_probs.astype(jnp.float32)), 1e-6, 1 - 1e-6)
+    return pi * jnp.log(pi / pj) + (1 - pi) * jnp.log((1 - pi) / (1 - pj))
+
+
+def robust_categorical_target(received_logits, mode: str, trim: int = 1):
+    """(J, B, V) received logits -> (B, V) robust consensus distribution.
+
+    Static J (the hetero engine's per-client view): coordinate-wise
+    trimmed mean or median over the J received softmax distributions,
+    renormalised back onto the simplex.  J - 2*trim < 1 falls back to the
+    untrimmed mean deterministically.
+    """
+    if mode not in ("trimmed", "median"):
+        raise ValueError(f"robust mode must be 'trimmed' or 'median', "
+                         f"got {mode!r}")
+    probs = jax.nn.softmax(
+        received_logits.astype(jnp.float32), axis=-1)   # (J,B,V)
+    J = probs.shape[0]
+    if mode == "median":
+        tgt = jnp.median(probs, axis=0)
+    else:
+        t = trim if J - 2 * trim >= 1 else 0
+        s = jnp.sort(probs, axis=0)
+        tgt = jnp.mean(s[t:J - t or None], axis=0)
+    tgt = jnp.clip(tgt, 1e-9, 1.0)
+    return tgt / jnp.sum(tgt, axis=-1, keepdims=True)
+
+
+def kl_to_robust_received(live_logits, received_logits, mode: str,
+                          trim: int = 1, temperature: float = 1.0):
+    """Robust Eq. 2 for ONE client: KL(P_live || robust-consensus of the
+    received predictions).  live (B, V) x received (J, B, V) -> (B,).
+    The consensus target is data (stop_gradient), like ``kl_to_received``.
+    """
+    rec = jax.lax.stop_gradient(
+        received_logits.astype(jnp.float32) / temperature)
+    tgt = jax.lax.stop_gradient(robust_categorical_target(rec, mode, trim))
+    lp_live = jax.nn.log_softmax(
+        live_logits.astype(jnp.float32) / temperature, axis=-1)
+    p_live = jnp.exp(lp_live)
+    return jnp.sum(p_live * (lp_live - jnp.log(tgt)), axis=-1)
+
+
+# ---------------------------------------------------------------------------
 # Bernoulli case (VisionNet sigmoid head — the paper's actual case study)
 
 def bernoulli_mutual_terms_vs(live_probs, fixed_probs, pair_w):

@@ -60,7 +60,13 @@ class Population:
         return None
 
     def mutual_phase(self, r, part, pm, payload, kl_weight, mutual_epochs,
-                     sparse_k: int = 0) -> dict:
+                     sparse_k: int = 0, dp=None, robust=None) -> dict:
+        """``dp``: a ``privacy.dp.DPSpec`` — clip + Gaussian-noise each
+        client's shared predictions before they cross the boundary
+        (DP-DML).  ``robust``: ``(mode, trim)`` — replace the Eq.-2 mean
+        with a trimmed-mean/median consensus target (Byzantine-robust
+        variants).  Populations that list the corresponding strategies in
+        ``supported`` must honour both."""
         raise NotImplementedError
 
     def fedavg_combine(self, part: List[int], pm) -> None:

@@ -34,9 +34,10 @@ import numpy as np
 from repro.core import stacking
 from repro.core.async_fl import layer_schedule
 from repro.core.fedavg import average_weights, weighted_average_weights
-from repro.core.mutual import (kl_to_received, sparse_kl_to_received,
-                               topk_predictions)
+from repro.core.mutual import (kl_to_received, kl_to_robust_received,
+                               sparse_kl_to_received, topk_predictions)
 from repro.core.populations.base import Population, broadcast_mask_counts
+from repro.privacy.dp import dp_noise_payload
 from repro.data.federated import FoldScheduler, round_batch_indices
 from repro.data.synthetic import make_token_stream
 from repro.kernels import ops
@@ -84,15 +85,18 @@ class HeteroClients(Population):
     """
 
     engine_name = "hetero"
-    supported = frozenset({"dml", "sparse-dml", "fedavg", "async"})
+    supported = frozenset({"dml", "sparse-dml", "fedavg", "async",
+                           "dp-dml", "trimmed-dml", "median-dml"})
     log_participants_always = True
+    _BYZ_MODES = ("label-flip", "sign-flip", "collude")
 
     def __init__(self, archs: Tuple[str, ...], data: np.ndarray,
                  labels: np.ndarray, rounds: int = 4,
                  local_epochs: int = 1, batch_size: int = 4,
                  public_batch: int = 4, lr: float = 3e-3, seed: int = 0,
                  mutual_updates_per_round: int = 1, reduced: bool = True,
-                 kernel_impl: str = "auto"):
+                 kernel_impl: str = "auto", byzantine=None,
+                 record_payloads: bool = False):
         self.archs = tuple(archs)
         # resolved once; the sparse mutual programs bake it into their jit
         # caches (the per-arch model forwards keep their own defaults)
@@ -118,6 +122,22 @@ class HeteroClients(Population):
             raise ValueError(f"clients disagree on the prediction space V "
                              f"({sorted(spaces)}); shared vocab required")
         self.n_classes = spaces.pop()
+        self.byzantine = {int(c): m for c, m in (byzantine or {}).items()}
+        for c, mode in self.byzantine.items():
+            if not 0 <= c < self.n_clients:
+                raise ValueError(
+                    f"byzantine client {c} out of range (K={self.n_clients})")
+            if mode not in self._BYZ_MODES:
+                raise ValueError(
+                    f"unknown byzantine mode {mode!r} for client {c}; "
+                    f"HeteroClients supports {self._BYZ_MODES}")
+            if mode == "label-flip" and self.kind == "lm":
+                raise ValueError(
+                    "label-flip is undefined for 'lm' clients (the private "
+                    "loss is next-token CE on the inputs; labels are only "
+                    "fold-stratification ids) — use sign-flip or collude")
+        self.record_payloads = bool(record_payloads)
+        self.payload_log: List[dict] = []
         self.opt_cfg = AdamWConfig(
             lr=lr, warmup=2,
             total_steps=max(rounds * (local_epochs
@@ -215,6 +235,32 @@ class HeteroClients(Population):
         self._progs[cache_key] = mutual_step
         return mutual_step
 
+    def _robust_prog(self, arch: str, kl_weight: float, mode: str,
+                     trim: int):
+        cache_key = (arch, kl_weight, "robust", mode, trim)
+        if cache_key in self._progs:
+            return self._progs[cache_key]
+        cm = self._models[arch]
+        opt_cfg = self.opt_cfg
+        kl_w = kl_weight
+
+        @jax.jit
+        def robust_step(params, opt, inputs, labs, others_logits, key):
+            """Robust Eq. 1: KL to the trimmed/median consensus of the
+            received logits instead of the mean of per-sender KLs."""
+            def loss_fn(p):
+                ce, live = cm.public_ce_and_logits(p, inputs, labs, key)
+                kl = jnp.mean(kl_to_robust_received(live, others_logits,
+                                                    mode, trim))
+                return ce + kl_w * kl, (ce, kl)
+            (_, (ce, kl)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+            return params, opt, ce, kl
+
+        self._progs[cache_key] = robust_step
+        return robust_step
+
     def _sparse_prog(self, arch: str, kl_weight: float, k: int) -> Dict:
         """Top-k variants: publish (indices, log-probs) of the k most
         likely classes; descend Eq. 1 against the received sparse sets."""
@@ -279,6 +325,8 @@ class HeteroClients(Population):
             if idx.shape[0] == 0:
                 continue
             inputs, labs = self._gather(idx)
+            if self.byzantine.get(c) == "label-flip":
+                labs = (labs + 1) % self.n_classes
             keys = jax.random.split(jax.random.fold_in(key_r, 100 + c),
                                     idx.shape[0])
             prog = self._prog(self.archs[c])
@@ -296,8 +344,27 @@ class HeteroClients(Population):
     def weights_payload(self, r: int):
         return self.folds.pop()[:self._pub_n]
 
+    def _poison_stack(self, stack: np.ndarray, part: List[int],
+                      pub_labs) -> np.ndarray:
+        """Apply payload Byzantine modes to the senders' rows of the
+        (M, N_pub, V) logit stack — what they actually put on the wire.
+        Their own receipts stay honest; the attack is on what they SEND."""
+        if not self.byzantine:
+            return stack
+        labs = np.asarray(pub_labs)
+        for s, c in enumerate(part):
+            mode = self.byzantine.get(c)
+            if mode == "sign-flip":
+                stack[s] = -stack[s]
+            elif mode == "collude":
+                wrong = (labs + 1) % self.n_classes
+                oh = np.zeros_like(stack[s])
+                oh[np.arange(len(labs)), wrong] = 8.0
+                stack[s] = oh
+        return stack
+
     def mutual_phase(self, r, part, pm, payload, kl_weight, mutual_epochs,
-                     sparse_k: int = 0) -> dict:
+                     sparse_k: int = 0, dp=None, robust=None) -> dict:
         K = self.n_clients
         pub = payload.data
         pub_inputs, pub_labs = self._gather(pub)
@@ -306,6 +373,9 @@ class HeteroClients(Population):
         kl_losses = [0.0] * K
         out = {"ran": False, "positions": 0, "public_ce": public_ce,
                "kl_loss": kl_losses}
+        if sparse_k and (dp is not None or robust is not None):
+            raise ValueError("sparse payloads compose with neither the DP "
+                             "release nor the robust combiners")
         if mutual_epochs <= 0 or len(part) < 2:
             return out
         n_pub = None
@@ -323,6 +393,18 @@ class HeteroClients(Population):
                 shared = [np.asarray(self._prog(self.archs[c])["share"](
                     self.client_params[c], pub_inputs)) for c in part]
                 stack = np.stack(shared)            # (M, N_pub, V)
+                stack = self._poison_stack(stack, part, pub_labs)
+                if dp is not None:
+                    # the whole stacked payload noised at once: one
+                    # release per sender (leading-axis slices), one key
+                    # per epoch
+                    stack = np.asarray(dp_noise_payload(
+                        jnp.asarray(stack), dp.clip, dp.noise_multiplier,
+                        dp.keys[e]))
+                if self.record_payloads:
+                    self.payload_log.append(
+                        {"round": r, "epoch": e, "part": list(part),
+                         "public": np.asarray(pub), "payloads": stack.copy()})
                 n_pub = stack.shape[1]
             for s, c in enumerate(part):
                 k = jax.random.fold_in(key_r, 1000 + e * K + c)
@@ -338,7 +420,11 @@ class HeteroClients(Population):
                         pub_inputs, pub_labs, others_idx, others_logp, k)
                 else:
                     others = jnp.asarray(np.delete(stack, s, axis=0))
-                    step = self._mutual_prog(self.archs[c], kl_weight)
+                    if robust is not None:
+                        step = self._robust_prog(self.archs[c], kl_weight,
+                                                 robust[0], int(robust[1]))
+                    else:
+                        step = self._mutual_prog(self.archs[c], kl_weight)
                     (self.client_params[c], self.client_opts[c],
                      ce, kl) = step(
                         self.client_params[c], self.client_opts[c],

@@ -39,8 +39,11 @@ from jax.sharding import PartitionSpec as P
 from repro import sharding
 from repro.configs.visionnet import VisionNetConfig
 from repro.core import async_fl, fedavg, stacking
-from repro.core.mutual import _pair_mask, bernoulli_mutual_terms_vs
+from repro.core.mutual import (_pair_mask, bernoulli_kl_to_target,
+                               bernoulli_mutual_terms_vs,
+                               robust_bernoulli_target)
 from repro.core.populations.base import Population
+from repro.privacy.dp import dp_probs_payload
 from repro.data.federated import (FoldScheduler, NonIIDScheduler,
                                   round_batch_indices)
 from repro.models.visionnet import (bce_loss, init_visionnet,
@@ -221,6 +224,52 @@ def _mutual_epoch_step(stacked_params, stacked_opt, keys_e, pm_rows,
         const_args=(shared, pub_images, pub_labels))
 
 
+def _robust_epoch_step(stacked_params, stacked_opt, keys_e, pm_rows,
+                       target, pub_images, pub_labels,
+                       vn_cfg: VisionNetConfig, sgd_cfg: SGDConfig,
+                       kl_weight: float, conv_impl: str):
+    """One Eq.-1 descent against FIXED per-client consensus targets.
+
+    Same chunked structure as ``_mutual_epoch_step``, but the Eq.-2 mean
+    over received predictions is replaced by per-client target rows
+    (``target`` (K, B) — already robustly aggregated over the received
+    payloads and held fixed); absentees get zero KL weight AND a masked
+    update.  Returns (params, opt, (bce, kld)).
+    """
+
+    def chunk(args, const):
+        c_params, c_opt, c_keys, c_pm, c_tgt = args
+        c_imgs, c_labs = const
+
+        def total_loss(cp):
+            live = jax.vmap(
+                lambda q, k: visionnet_forward(q, vn_cfg, c_imgs,
+                                               train=True, dropout_key=k,
+                                               conv_impl=conv_impl)
+            )(cp, c_keys)                                       # (2,B)
+            bce = jax.vmap(lambda pr: bce_loss(pr, c_labs))(live)
+            kld = jnp.mean(bernoulli_kl_to_target(live, c_tgt),
+                           axis=-1) * c_pm                      # (2,)
+            return (jnp.sum(bce * c_pm) + kl_weight * jnp.sum(kld),
+                    (bce, kld))
+
+        (_, (bce, kld)), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(c_params)
+        new_p, new_o, _ = jax.vmap(
+            lambda q, g, o: sgd_update(q, g, o, sgd_cfg))(c_params, grads,
+                                                          c_opt)
+        p = jax.vmap(_masked_lerp)(c_params, new_p, c_pm)
+        o = {"vel": jax.vmap(_masked_lerp)(c_opt["vel"], new_o["vel"],
+                                           c_pm),
+             "step": c_opt["step"] + c_pm.astype(jnp.int32)}
+        return p, o, (bce, kld)
+
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    return stacking.chunked_client_map(
+        chunk, (stacked_params, stacked_opt, keys_e, pm_rows, target), K,
+        const_args=(pub_images, pub_labels))
+
+
 @functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
                                              "kl_weight", "conv_impl"))
 def _mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels, keys,
@@ -251,6 +300,68 @@ def _mutual_scan(stacked_params, stacked_opt, pub_images, pub_labels, keys,
     (stacked_params, stacked_opt), (loss, bce, kld) = jax.lax.scan(
         _isolated_epoch(epoch), (stacked_params, stacked_opt), keys)
     return stacked_params, stacked_opt, (loss[-1], bce[-1], kld[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("vn_cfg", "sgd_cfg",
+                                             "kl_weight", "conv_impl",
+                                             "robust_mode", "trim"))
+def _mutual_scan_ext(stacked_params, stacked_opt, pub_images, pub_labels,
+                     keys, part_mask, byz_sign, byz_collude, dp_clip,
+                     dp_sigma, noise_keys, vn_cfg: VisionNetConfig,
+                     sgd_cfg: SGDConfig, kl_weight: float,
+                     conv_impl: str = "fused", robust_mode: str = "mean",
+                     trim: int = 0):
+    """Extended mutual program: payload poisoning → DP release → combine.
+
+    The PLAIN protocol keeps the untouched ``_mutual_scan`` program (its
+    bitwise parity with the legacy trainers is load-bearing); every
+    privacy/robustness feature routes through this program instead.
+
+    keys (E, K, 2) dropout keys · noise_keys (E, 2) one DP key per epoch ·
+    byz_sign / byz_collude (K,) 0/1 Byzantine masks · dp_clip / dp_sigma
+    scalars (sigma = 0 makes the DP stage an exact bitwise no-op).  Per
+    epoch: participants predict on the public fold; Byzantine senders
+    replace their payload on the wire (sign-flip: p → 1−p; collude:
+    confident mass on the wrong label) — their own training still sees
+    honest receipts, the attack is on what they SEND; the stacked payload
+    is then clipped + Gaussian-noised (``privacy.dp``) and combined either
+    by the Eq.-2 mean (robust_mode='mean') or by a trimmed/median
+    consensus target.  Besides the usual (params, opt, losses) it returns
+    the per-epoch ON-WIRE payloads (E, K, B) — exactly what an
+    eavesdropping adversary observes — for the attack probes.
+    """
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    pair_w = _pair_mask(K, part_mask)
+    wrong = jnp.clip(1.0 - pub_labels.astype(jnp.float32),
+                     0.02, 0.98)[None, :]                        # (1,B)
+    sf = byz_sign[:, None]
+    cl = byz_collude[:, None]
+
+    def epoch(carry, xs):
+        ks, nk = xs
+        params, opt = carry
+        shared = jax.lax.stop_gradient(
+            _predict_chunked(params, pub_images, vn_cfg))        # (K,B)
+        shared = (1.0 - sf - cl) * shared + sf * (1.0 - shared) + cl * wrong
+        shared = jax.lax.stop_gradient(
+            dp_probs_payload(shared, dp_clip, dp_sigma, nk))
+        if robust_mode == "mean":
+            params, opt, (bce, kld) = _mutual_epoch_step(
+                params, opt, ks, part_mask, pair_w, shared, pub_images,
+                pub_labels, vn_cfg, sgd_cfg, kl_weight, conv_impl)
+        else:
+            target = robust_bernoulli_target(shared, part_mask,
+                                             robust_mode, trim)
+            params, opt, (bce, kld) = _robust_epoch_step(
+                params, opt, ks, part_mask, target, pub_images,
+                pub_labels, vn_cfg, sgd_cfg, kl_weight, conv_impl)
+        return (params, opt), (bce + kl_weight * kld, bce, kld, shared)
+
+    (stacked_params, stacked_opt), (loss, bce, kld, pay) = jax.lax.scan(
+        _isolated_epoch(epoch), (stacked_params, stacked_opt),
+        (keys, noise_keys))
+    return (stacked_params, stacked_opt, (loss[-1], bce[-1], kld[-1]),
+            pay)
 
 
 @functools.lru_cache(maxsize=None)
@@ -352,10 +463,20 @@ class VisionClients(Population):
     ``mesh``: optional jax Mesh with a ``clients`` axis — the round's two
     training programs then run device-sharded over the client axis
     (bitwise-identical results; see the sharded program docstrings).
+
+    ``byzantine``: ``{client_index: mode}`` marks adversarial clients —
+    ``"label-flip"`` poisons their LOCAL training labels, ``"sign-flip"``
+    inverts the predictions they share (p → 1−p), ``"collude"`` makes
+    them share confident mass on the wrong public label.  ``record_payloads``
+    keeps every round's on-wire prediction payloads in ``payload_log``
+    (the attack probes' observation tap).  Either feature routes the
+    mutual phase through the extended program, which is unsharded-only.
     """
 
     engine_name = "federated"
-    supported = frozenset({"dml", "fedavg", "async"})
+    supported = frozenset({"dml", "fedavg", "async",
+                           "dp-dml", "trimmed-dml", "median-dml"})
+    _BYZ_MODES = ("label-flip", "sign-flip", "collude")
 
     def __init__(self, vn_cfg: VisionNetConfig, train_images: np.ndarray,
                  train_labels: np.ndarray, n_clients: int = 5,
@@ -363,12 +484,27 @@ class VisionClients(Population):
                  batch_size: int = 32, lr: float = 0.05,
                  momentum: float = 0.9, clip_norm: float = 1.0,
                  non_iid_alpha: float = 0.0, seed: int = 0,
-                 eval_batch: int = 256, mesh=None):
+                 eval_batch: int = 256, byzantine=None,
+                 record_payloads: bool = False, mesh=None):
         if mesh is not None and stacking.CLIENT_AXIS not in mesh.axis_names:
             raise ValueError(
                 f"mesh needs a '{stacking.CLIENT_AXIS}' axis, got "
                 f"{mesh.axis_names}")
         self.mesh = mesh
+        self.byzantine = {int(c): m for c, m in (byzantine or {}).items()}
+        for c, mode in self.byzantine.items():
+            if not 0 <= c < n_clients:
+                raise ValueError(
+                    f"byzantine client {c} out of range (K={n_clients})")
+            if mode not in self._BYZ_MODES:
+                raise ValueError(
+                    f"unknown byzantine mode {mode!r} for client {c}; "
+                    f"VisionClients supports {self._BYZ_MODES}")
+        self._flip_rows = sorted(c for c, m in self.byzantine.items()
+                                 if m == "label-flip")
+        self.record_payloads = bool(record_payloads)
+        self.payload_log: List[dict] = []
+        self.fold_log: List[list] = []
         self.vn_cfg = vn_cfg
         self.images = train_images
         self.labels = train_labels
@@ -469,6 +605,9 @@ class VisionClients(Population):
         if part_mask is not None:
             mask = mask * part_mask[:, None]
         imgs, labs = self._gather(idx)
+        if self._flip_rows:
+            rows = jnp.asarray(self._flip_rows)
+            labs = labs.at[rows].set(1 - labs[rows])
         keys = self._split_keys(K, idx.shape[1])
         if self.mesh is not None and K > 1:
             self._to_mesh()
@@ -543,6 +682,10 @@ class VisionClients(Population):
         K = self.n_clients
         folds, losses = self._local_round(pm if len(part) < K else None)
         self._last_folds = folds
+        if self.record_payloads:
+            # per-client private-fold indices — the attack probes' member
+            # ground truth (indices only; the pool itself is not copied)
+            self.fold_log.append([np.asarray(f) for f in folds])
         return losses
 
     def public_payload(self, r: int):
@@ -552,11 +695,32 @@ class VisionClients(Population):
     def weights_payload(self, r: int):
         return self.folds.pop()
 
+    def _byz_payload_masks(self):
+        sf = np.zeros((self.n_clients,), np.float32)
+        cl = np.zeros((self.n_clients,), np.float32)
+        for c, mode in self.byzantine.items():
+            if mode == "sign-flip":
+                sf[c] = 1.0
+            elif mode == "collude":
+                cl[c] = 1.0
+        return sf, cl
+
     def mutual_phase(self, r, part, pm, payload, kl_weight, mutual_epochs,
-                     sparse_k: int = 0) -> dict:
+                     sparse_k: int = 0, dp=None, robust=None) -> dict:
         K = self.n_clients
         pub = payload.data
         out = {"ran": False, "positions": len(pub)}
+        sf, cl = self._byz_payload_masks()
+        # any privacy/robustness feature — including the payload tap —
+        # diverts to the extended program so the plain program (whose
+        # bitwise parity with the legacy trainers is pinned by tests)
+        # never changes
+        ext = (dp is not None or robust is not None or sf.any() or cl.any()
+               or self.record_payloads)
+        if ext and self.mesh is not None:
+            raise NotImplementedError(
+                "DP / Byzantine / robust-combine / payload recording run "
+                "on the unsharded engine only; drop mesh= or the feature")
         if mutual_epochs > 0 and len(part) >= 2:
             pub_imgs = jnp.asarray(self.images[pub])
             pub_labs = jnp.asarray(self.labels[pub])
@@ -569,12 +733,33 @@ class VisionClients(Population):
                                          self.mesh, K, self.vn_cfg,
                                          self.sgd_cfg, kl_weight,
                                          conv_impl="fused")
-            else:
+            elif not ext:
                 self.client_params, self.client_opts, (loss, _, kld) = \
                     _mutual_scan(self.client_params, self.client_opts,
                                  pub_imgs, pub_labs, keys, jnp.asarray(pm),
                                  self.vn_cfg, self.sgd_cfg, kl_weight,
                                  conv_impl="fused" if K > 1 else "native")
+            else:
+                mode, trim = ("mean", 0) if robust is None else robust
+                if dp is not None:
+                    dp_clip, dp_sigma = dp.clip, dp.noise_multiplier
+                    nkeys = dp.keys
+                else:
+                    dp_clip, dp_sigma = 1.0, 0.0     # exact no-op gate
+                    nkeys = jax.random.split(jax.random.PRNGKey(0),
+                                             mutual_epochs)
+                (self.client_params, self.client_opts, (loss, _, kld),
+                 pay) = _mutual_scan_ext(
+                    self.client_params, self.client_opts, pub_imgs,
+                    pub_labs, keys, jnp.asarray(pm), jnp.asarray(sf),
+                    jnp.asarray(cl), float(dp_clip), float(dp_sigma),
+                    nkeys, self.vn_cfg, self.sgd_cfg, kl_weight,
+                    conv_impl="fused" if K > 1 else "native",
+                    robust_mode=mode, trim=int(trim))
+                if self.record_payloads:
+                    self.payload_log.append(
+                        {"round": r, "public": np.asarray(pub),
+                         "payloads": np.asarray(pay)})
             self.dispatch_log.append((r, "mutual_scan"))
             out = {"ran": True, "positions": len(pub),
                    "client_loss": [float(x) * m for x, m in

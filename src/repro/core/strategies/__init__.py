@@ -3,6 +3,10 @@ answer to *what crosses the wire*:
 
 - :class:`DML`          dense prediction sharing (the paper, Eq. 1/2)
 - :class:`SparseDML`    top-k prediction sharing (bandwidth-constrained)
+- :class:`DPDML`        clipped + Gaussian-noised predictions with a
+                        Rényi (ε, δ) accountant (privacy-constrained)
+- :class:`TrimmedDML`   trimmed-mean consensus Eq. 2 (Byzantine-robust)
+- :class:`MedianDML`    median consensus Eq. 2 (Byzantine-robust)
 - :class:`FedAvg`       full weight averaging (baseline #1)
 - :class:`AsyncWeights` shallow/deep scheduled weight sharing (baseline #2)
 
@@ -12,7 +16,10 @@ the protocol populations are orchestrated through.
 from repro.core.strategies.base import (Payload, STRATEGIES, Strategy,
                                         get_strategy)
 from repro.core.strategies.dml import DML, SparseDML
+from repro.core.strategies.dp import DPDML
+from repro.core.strategies.robust import MedianDML, TrimmedDML
 from repro.core.strategies.weights import AsyncWeights, FedAvg
 
 __all__ = ["Strategy", "Payload", "STRATEGIES", "get_strategy",
-           "DML", "SparseDML", "FedAvg", "AsyncWeights"]
+           "DML", "SparseDML", "DPDML", "TrimmedDML", "MedianDML",
+           "FedAvg", "AsyncWeights"]

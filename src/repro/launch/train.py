@@ -18,6 +18,17 @@ driver doubles as the integration test of the whole stack.
   PYTHONPATH=src python -m repro.launch.train --method hetero \
       --archs qwen3-4b,qwen3-4b --strategy fedavg --rounds 3
 
+Privacy & robustness (prediction-sharing populations): dp-dml clips and
+Gaussian-noises every shared payload (``--dp-epsilon`` calibrates the
+noise to a target budget), trimmed-/median-dml swap the Eq.-2 mean for a
+robust consensus, and ``--byzantine`` injects poisoned clients to attack:
+
+  PYTHONPATH=src python -m repro.launch.train --method hetero \
+      --archs qwen3-4b,mamba2-780m --strategy dp-dml --dp-epsilon 4.0
+  PYTHONPATH=src python -m repro.launch.train --method hetero \
+      --archs qwen3-4b,mamba2-780m,qwen3-4b --strategy median-dml \
+      --byzantine 2=sign-flip --rounds 3
+
 Device-sharded DML (one device owns whole clients; the only collective is
 the public-logit all-gather — see core.distributed.make_sharded_dml_step):
 
@@ -39,8 +50,36 @@ from repro.core.strategies import get_strategy
 
 
 def _make_strategy(args):
-    return get_strategy(args.strategy, kl_weight=args.kl_weight,
-                        k=args.sparse_k)
+    knobs = dict(kl_weight=args.kl_weight, k=args.sparse_k, trim=args.trim,
+                 dp_clip=args.dp_clip, dp_delta=args.dp_delta,
+                 dp_seed=args.seed)
+    if args.strategy == "dp-dml":
+        sigma = args.dp_noise
+        if args.dp_epsilon:
+            from repro.privacy import calibrate_noise
+            releases = args.rounds if args.method == "hetero" else args.steps
+            sigma = calibrate_noise(args.dp_epsilon, args.dp_delta, releases)
+            print(f"calibrated dp noise multiplier: sigma={sigma:.4f} for "
+                  f"(eps={args.dp_epsilon}, delta={args.dp_delta}) over "
+                  f"{releases} releases")
+        knobs["dp_noise_multiplier"] = sigma
+    # get_strategy drops whatever knobs the chosen strategy doesn't take
+    return get_strategy(args.strategy, **knobs)
+
+
+def _parse_byzantine(spec: str) -> dict:
+    """``"2=collude,0=sign-flip"`` -> {2: "collude", 0: "sign-flip"}."""
+    out = {}
+    for item in (spec or "").split(","):
+        item = item.strip()
+        if not item:
+            continue
+        idx, _, mode = item.partition("=")
+        if not mode:
+            raise SystemExit(
+                f"--byzantine entries are IDX=MODE, got {item!r}")
+        out[int(idx)] = mode
+    return out
 
 
 def _print_history(h) -> None:
@@ -65,7 +104,8 @@ def _run_hetero(args) -> int:
     population = HeteroClients(
         archs, pool, labels, rounds=args.rounds, batch_size=args.batch,
         public_batch=max(1, args.batch // 2), lr=args.lr, seed=args.seed,
-        kernel_impl=args.kernel_impl)
+        kernel_impl=args.kernel_impl,
+        byzantine=_parse_byzantine(args.byzantine))
     fed = Federation(population, _make_strategy(args),
                      participation=args.participation)
     print(f"federating [{args.strategy}]:", ", ".join(
@@ -75,6 +115,9 @@ def _run_hetero(args) -> int:
         print(f"resumed from {args.resume} at round {fed.round}")
     h = fed.run(until=args.until)
     _print_history(h)
+    if hasattr(fed.strategy, "epsilon"):
+        print(f"privacy spent: epsilon={fed.strategy.epsilon():.3f} at "
+              f"delta={fed.strategy.dp_delta}")
     fed.evaluate()
     print(f"held-out eval loss per client: "
           f"{['%.3f' % x for x in h.client_eval_loss]}")
@@ -134,11 +177,31 @@ def main(argv=None) -> int:
                     help="single model, stacked same-arch clients (dml), "
                          "or one arch per client (hetero)")
     ap.add_argument("--strategy", default="dml",
-                    choices=["dml", "sparse-dml", "fedavg", "async"],
+                    choices=["dml", "sparse-dml", "fedavg", "async",
+                             "dp-dml", "trimmed-dml", "median-dml"],
                     help="what crosses the wire each round "
                          "(federated methods only)")
     ap.add_argument("--sparse-k", type=int, default=64,
                     help="top-k kept per position for --strategy sparse-dml")
+    ap.add_argument("--dp-noise", type=float, default=1.0,
+                    help="Gaussian noise multiplier sigma for dp-dml "
+                         "(std = clip * sigma per shared payload)")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="L2 clip bound on each dp-dml payload")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="delta of the reported (eps, delta) guarantee")
+    ap.add_argument("--dp-epsilon", type=float, default=0.0,
+                    help="target epsilon: calibrate --dp-noise to spend "
+                         "at most this over the whole schedule "
+                         "(overrides --dp-noise)")
+    ap.add_argument("--byzantine", default="",
+                    metavar="IDX=MODE,...",
+                    help="poisoned clients for --method hetero, e.g. "
+                         "'2=collude,0=sign-flip' (modes: label-flip, "
+                         "sign-flip, collude)")
+    ap.add_argument("--trim", type=int, default=1,
+                    help="values trimmed per side by --strategy "
+                         "trimmed-dml")
     ap.add_argument("--clients", type=int, default=2)
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)

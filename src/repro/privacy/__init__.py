@@ -1,0 +1,37 @@
+"""Privacy & robustness toolkit — makes the paper's central claim
+("sharing public-set predictions preserves data privacy") executable.
+
+Three legs, each with its own module:
+
+  accountant  Rényi/moments (ε, δ) accounting for the Gaussian mechanism
+              releases DP-DML makes every mutual epoch, validated against
+              the closed-form single-release bound.
+  dp          the clip + Gaussian-noise payload transforms applied to
+              shared predictions BEFORE they cross client boundaries.
+  attacks     the probes that turn the privacy claim into an assertion:
+              loss-threshold/shadow membership inference and
+              gradient-inversion reconstruction, run against both DML
+              prediction payloads and FedAvg weight uploads.
+
+The strategies that consume this package live in
+``repro.core.strategies`` (``DPDML``, ``TrimmedDML``, ``MedianDML``);
+the verification battery in ``tests/test_privacy_*.py`` and
+``benchmarks/run.py --table privacy``.
+"""
+from repro.privacy.accountant import (RDPAccountant, calibrate_noise,
+                                      gaussian_epsilon)
+from repro.privacy.attacks import (cosine_similarity, dense_features,
+                                   example_gradient, features_from_grad,
+                                   gradient_inversion, mia_advantage,
+                                   payload_mia, payload_reconstruction,
+                                   reconstruction_error, weight_upload_mia)
+from repro.privacy.dp import DPSpec, clip_payload, dp_noise_payload
+
+__all__ = [
+    "RDPAccountant", "gaussian_epsilon", "calibrate_noise",
+    "DPSpec", "clip_payload", "dp_noise_payload",
+    "mia_advantage", "weight_upload_mia", "payload_mia",
+    "example_gradient", "dense_features", "features_from_grad",
+    "cosine_similarity",
+    "gradient_inversion", "payload_reconstruction", "reconstruction_error",
+]

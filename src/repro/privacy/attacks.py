@@ -1,0 +1,293 @@
+"""Attack probes — the empirical side of the privacy battery.
+
+The accountant (``privacy.accountant``) upper-bounds what DP-DML can
+leak; these probes measure what the protocols DO leak, so the test suite
+can pin the ordering the paper's bandwidth argument implies:
+
+    MIA advantage:  DP-DML  <=  DML payloads  <  FedAvg weight deltas
+
+* **Membership inference** (``mia_advantage`` + the two probes): the
+  adversary scores examples and thresholds "member / not member".  Under
+  FedAvg the adversary holds the client's uploaded weights and scores
+  each example by its loss under them (``weight_upload_mia`` — local
+  epochs overfit the private fold, so members sit at lower loss).  Under
+  DML the adversary only ever sees the (public-fold, prediction) payload
+  stream, so it first distills a surrogate of the client from that
+  stream (``distill_surrogate``) and loss-thresholds under the surrogate
+  (``payload_mia``).  Advantage is the threshold-free
+  max_t (TPR - FPR) — the Kolmogorov-Smirnov distance between the member
+  and non-member score samples; 0 = chance, 1 = perfect.
+
+* **Gradient inversion / representation leakage**: a parameter-space
+  gradient (what FedAvg-style uploads reveal, delta = -lr * sum of
+  gradients) leaks the private example's penultimate representation IN
+  CLOSED FORM — the sigmoid head gives grad_W_head = h * (p - y) and
+  grad_b_head = (p - y), so ``features_from_grad`` recovers h exactly by
+  one division.  ``gradient_inversion`` is the standard optimisation
+  attack on top (probe image fitted to the observed gradient by cosine
+  distance, Adam); ``payload_reconstruction`` is the matched baseline
+  for prediction sharing — the best a payload adversary can do is match
+  a few output probabilities, which constrains neither the pixels nor
+  the representation.
+
+Everything here is observation-side only: probes consume the payload tap
+(``population.payload_log``), fold indices (``population.fold_log``) and
+parameter pytrees, never the population's internals.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.models.visionnet import (_CONV_IMPLS, _max_pool, bce_loss,
+                                    init_visionnet, visionnet_forward)
+
+# ---------------------------------------------------------------------------
+# scoring
+
+
+def mia_advantage(member_scores, non_member_scores) -> float:
+    """max_t (TPR - FPR) of the rule "score >= t -> member".
+
+    Threshold-free: sweeps every achievable threshold (the KS statistic
+    of the two score samples).  Scores must be oriented so members are
+    expected HIGHER (e.g. pass negated losses).  Returns a float in
+    [0, 1]; chance = 0 even when the two samples differ in size.
+    """
+    m = np.sort(np.asarray(member_scores, np.float64))
+    n = np.sort(np.asarray(non_member_scores, np.float64))
+    if len(m) == 0 or len(n) == 0:
+        raise ValueError("need at least one member and one non-member score")
+    thr = np.concatenate([m, n])
+    tpr = 1.0 - np.searchsorted(m, thr, side="left") / len(m)
+    fpr = 1.0 - np.searchsorted(n, thr, side="left") / len(n)
+    return float(np.max(tpr - fpr))
+
+
+def per_example_bce(probs, labels, eps: float = 1e-7) -> np.ndarray:
+    """Elementwise Bernoulli cross-entropy (``models.visionnet.bce_loss``
+    is the batch MEAN; the attacks need the per-example vector)."""
+    p = np.clip(np.asarray(probs, np.float64), eps, 1.0 - eps)
+    y = np.asarray(labels, np.float64)
+    return -(y * np.log(p) + (1.0 - y) * np.log(1.0 - p))
+
+
+# ---------------------------------------------------------------------------
+# membership inference
+
+
+def weight_upload_mia(params, vn_cfg, images, labels, member_idx,
+                      non_member_idx, batch: int = 256) -> float:
+    """MIA against a WEIGHT upload: the adversary runs the uploaded
+    client model and loss-thresholds.  ``params`` is one client's
+    (unstacked) pytree; returns the advantage."""
+    losses = model_example_losses(params, vn_cfg, images, labels, batch)
+    return mia_advantage(-losses[np.asarray(member_idx)],
+                         -losses[np.asarray(non_member_idx)])
+
+
+def model_example_losses(params, vn_cfg, images, labels,
+                         batch: int = 256) -> np.ndarray:
+    """Per-example BCE of a VisionNet under ``params`` over a pool."""
+    out = []
+    for i in range(0, len(images), batch):
+        probs = visionnet_forward(params, vn_cfg,
+                                  jnp.asarray(images[i:i + batch]),
+                                  train=False)
+        out.append(per_example_bce(np.asarray(probs), labels[i:i + batch]))
+    return np.concatenate(out)
+
+
+def _adam_scan(obj, x0, steps: int, lr: float):
+    """Minimise ``obj`` over an array with inlined Adam — the attack
+    optimiser (SGD stalls on the ill-conditioned inversion objectives)."""
+
+    def step(carry, i):
+        x, m, v = carry
+        g = jax.grad(obj)(x)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** (i + 1.0))
+        vh = v / (1 - 0.999 ** (i + 1.0))
+        x = x - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return (x, m, v), ()
+
+    (x, _, _), _ = jax.lax.scan(
+        step, (x0, jnp.zeros_like(x0), jnp.zeros_like(x0)),
+        jnp.arange(steps, dtype=jnp.float32))
+    return x
+
+
+def distill_surrogate(vn_cfg, pub_images, target_probs, key,
+                      steps: int = 200, lr: float = 0.05):
+    """Train a surrogate VisionNet to mimic an observed payload stream.
+
+    ``pub_images`` (N, H, W, C) public examples and ``target_probs`` (N,)
+    the probabilities the victim shared on them — the ONLY things a
+    DML-payload adversary holds.  Full-batch BCE-to-soft-targets descent;
+    returns the surrogate params.
+    """
+    params = init_visionnet(key, vn_cfg)
+    imgs = jnp.asarray(pub_images)
+    tgt = jnp.asarray(target_probs, jnp.float32)
+
+    @jax.jit
+    def run(params):
+        def soft_bce(p):
+            pr = jnp.clip(visionnet_forward(p, vn_cfg, imgs, train=False),
+                          1e-7, 1 - 1e-7)
+            return -jnp.mean(tgt * jnp.log(pr) +
+                             (1 - tgt) * jnp.log(1 - pr))
+
+        def step(carry, _):
+            p, vel = carry
+            g = jax.grad(soft_bce)(p)
+            vel = jax.tree.map(lambda v, gg: 0.9 * v + gg, vel, g)
+            p = jax.tree.map(lambda q, v: q - lr * v, p, vel)
+            return (p, vel), ()
+
+        vel = jax.tree.map(jnp.zeros_like, params)
+        (params, _), _ = jax.lax.scan(step, (params, vel), None,
+                                      length=steps)
+        return params
+
+    return run(params)
+
+
+def payload_mia(vn_cfg, pub_images, target_probs, images, labels,
+                member_idx, non_member_idx, key,
+                steps: int = 200, lr: float = 0.05) -> float:
+    """MIA against a PREDICTION payload stream: distill a surrogate from
+    the observed (public image, shared probability) pairs, then
+    loss-threshold under the surrogate.  The same probe measures plain
+    DML (raw payloads) and DP-DML (noised payloads) — the payload tensors
+    are whatever actually crossed the wire."""
+    surrogate = distill_surrogate(vn_cfg, pub_images, target_probs, key,
+                                  steps=steps, lr=lr)
+    return weight_upload_mia(surrogate, vn_cfg, images, labels,
+                             member_idx, non_member_idx)
+
+
+def collect_client_payloads(payload_log, images, client: int):
+    """Flatten a ``VisionClients.payload_log`` into the (public images,
+    shared probs) pairs an eavesdropper observed from ``client``:
+    returns (imgs (N, H, W, C), probs (N,)) over all rounds/epochs."""
+    im, pr = [], []
+    for rec in payload_log:
+        pay = rec["payloads"]                      # (E, K, B)
+        pub = rec["public"]
+        for e in range(pay.shape[0]):
+            im.append(images[pub])
+            pr.append(pay[e, client])
+    if not im:
+        raise ValueError("payload_log is empty — construct the population "
+                         "with record_payloads=True and run rounds first")
+    return np.concatenate(im), np.concatenate(pr)
+
+
+# ---------------------------------------------------------------------------
+# gradient inversion
+
+
+def example_gradient(params, vn_cfg, x, y):
+    """The parameter-space gradient a weight-sharing round reveals for a
+    (batch of) private example(s): grad_theta BCE(f_theta(x), y)."""
+    return jax.grad(lambda p: bce_loss(
+        visionnet_forward(p, vn_cfg, jnp.asarray(x), train=False),
+        jnp.asarray(y)))(params)
+
+
+def dense_features(params, vn_cfg, images):
+    """The penultimate (post-dense, pre-head) representation h: (B, D).
+    Mirrors ``visionnet_forward`` dropout-free up to the head."""
+    x = jnp.asarray(images).astype(jnp.float32)
+    conv = _CONV_IMPLS["native"]
+    for i, cp in enumerate(params["conv"]):
+        x = jax.nn.relu(conv(x, cp["w"], cp["b"]))
+        if i < 2:
+            x = _max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(x @ params["dense"]["w"] + params["dense"]["b"])
+
+
+def features_from_grad(grad) -> np.ndarray:
+    """EXACT representation recovery from one example's gradient.
+
+    The sigmoid head is linear in h: grad_W_head = h * (p - y) and
+    grad_b_head = (p - y), so h = grad_W_head[:, 0] / grad_b_head[0] —
+    a weight upload hands the adversary the private example's penultimate
+    representation in closed form, no optimisation needed.  (Undefined
+    when p == y exactly; the probe uses examples the model is not yet
+    perfect on.)
+    """
+    gw = np.asarray(grad["head"]["w"])[:, 0]
+    gb = float(np.asarray(grad["head"]["b"])[0])
+    if abs(gb) < 1e-12:
+        raise ValueError("grad_b_head == 0 (p == y exactly); the head "
+                         "gradient carries no scale to divide out")
+    return gw / gb
+
+
+def cosine_similarity(a, b) -> float:
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(np.dot(a, b) /
+                 (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12))
+
+
+def gradient_inversion(params, vn_cfg, target_grad, x_shape, y, key,
+                       steps: int = 800, lr: float = 0.1):
+    """The standard inverting-gradients attack: optimise a probe batch x
+    (Adam) to minimise the cosine distance between
+    grad_theta BCE(f_theta(x), y) and the observed ``target_grad``.
+    Returns (reconstruction, final cosine distance).  On VisionNet the
+    pooled conv stack makes pixel recovery ill-posed — the closed-form
+    ``features_from_grad`` is the assertive probe; this one measures how
+    tightly the observed gradient constrains the adversary's search
+    (final distance << 1 even when the pixels are not unique)."""
+    flat_tgt, _ = ravel_pytree(jax.tree.map(jnp.asarray, target_grad))
+    x0 = 0.1 * jax.random.normal(key, x_shape, jnp.float32)
+    yy = jnp.asarray(y)
+
+    def cosine_obj(x):
+        g = jax.grad(lambda p: bce_loss(
+            visionnet_forward(p, vn_cfg, x, train=False), yy))(params)
+        fg, _ = ravel_pytree(g)
+        denom = jnp.linalg.norm(fg) * jnp.linalg.norm(flat_tgt) + 1e-12
+        return 1.0 - jnp.dot(fg, flat_tgt) / denom
+
+    run = jax.jit(lambda x0: _adam_scan(cosine_obj, x0, steps, lr))
+    x = run(x0)
+    return np.asarray(x), float(cosine_obj(x))
+
+
+def payload_reconstruction(vn_cfg, surrogate_params, prob, x_shape, key,
+                           steps: int = 800, lr: float = 0.1):
+    """The matched payload-only baseline: all a prediction payload pins
+    down is a few output probabilities, so the best reconstruction
+    objective available is "find x whose prediction matches the shared
+    prob" — which constrains neither the pixels nor the representation.
+    Returns the (chance-level) reconstruction."""
+    x0 = 0.1 * jax.random.normal(key, x_shape, jnp.float32)
+    p_tgt = jnp.asarray(prob, jnp.float32)
+
+    def obj(x):
+        pr = visionnet_forward(surrogate_params, vn_cfg, x, train=False)
+        return jnp.mean((pr - p_tgt) ** 2)
+
+    run = jax.jit(lambda x0: _adam_scan(obj, x0, steps, lr))
+    return np.asarray(run(x0))
+
+
+def reconstruction_error(x_rec, x_true) -> float:
+    """Scale-invariant per-pixel error: MSE after matching mean/std (an
+    inversion that recovers structure up to affine intensity still
+    counts; pure noise does not)."""
+    a = np.asarray(x_rec, np.float64).ravel()
+    b = np.asarray(x_true, np.float64).ravel()
+    a = (a - a.mean()) / (a.std() + 1e-12)
+    b = (b - b.mean()) / (b.std() + 1e-12)
+    # sign-invariant too: cosine objectives can invert contrast
+    return float(min(np.mean((a - b) ** 2), np.mean((a + b) ** 2)))

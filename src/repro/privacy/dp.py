@@ -1,0 +1,79 @@
+"""Clip + Gaussian-noise transforms for shared prediction payloads —
+what DP-DML applies BEFORE predictions cross client boundaries.
+
+The DP unit is one client's whole per-epoch payload: the (positions,)
+Bernoulli probability vector (VisionClients) or the (positions, V) logit
+tensor (HeteroClients), flattened and L2-clipped to ``clip`` so the
+Gaussian mechanism's sensitivity is bounded by construction, then noised
+with std ``clip * noise_multiplier``.  The accountant
+(``privacy.accountant``) charges one Gaussian release per client per
+mutual epoch for exactly this transform.
+
+All transforms are jit-safe (shape-static, branch-free): a
+``noise_multiplier`` of 0 with an infinite ``clip`` is an EXACT no-op
+(the gating keeps the payload bitwise-unchanged), which lets one program
+serve both the DP and non-DP paths without perturbing parity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class DPSpec:
+    """One round's DP parameters, handed by ``DPDML`` to the population.
+
+    clip              L2 bound on each client's flattened payload
+    noise_multiplier  noise std in units of ``clip``
+    keys              (mutual_epochs, 2) uint32 PRNG keys, one per epoch
+                      (the population folds the client index in, so every
+                      client's release draws independent noise)
+    """
+    clip: float
+    noise_multiplier: float
+    keys: Any = None
+
+
+def clip_payload(payload, clip: float):
+    """L2-clip each leading-axis slice of ``payload`` (one slice = one
+    client's release), flattening the rest: ``x * min(1, clip/||x||)``."""
+    flat = payload.reshape(payload.shape[0], -1)
+    norm = jnp.linalg.norm(flat, axis=-1, keepdims=True)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return (flat * scale).reshape(payload.shape)
+
+
+def dp_noise_payload(payload, clip: float, noise_multiplier: float, key,
+                     center: Optional[float] = None):
+    """Clip + Gaussian-noise one stacked payload (K releases at once).
+
+    payload: (K, ...) — leading axis is the releasing client.
+    ``center`` (e.g. 0.5 for Bernoulli probabilities) is subtracted before
+    clipping and added back after noising, so the clip bound measures the
+    informative deviation rather than the constant offset.
+
+    ``noise_multiplier <= 0`` returns the payload bitwise-unchanged (the
+    branch is a lax.cond-free where-gate, so the same jitted program
+    serves DP and non-DP rounds).
+    """
+    x = payload if center is None else payload - center
+    clipped = clip_payload(x, clip)
+    noise = noise_multiplier * clip * jax.random.normal(
+        key, payload.shape, jnp.float32)
+    noised = clipped + noise.astype(payload.dtype)
+    if center is not None:
+        noised = noised + center
+    apply = (jnp.asarray(noise_multiplier, jnp.float32) > 0)
+    return jnp.where(apply, noised, payload)
+
+
+def dp_probs_payload(probs, clip: float, noise_multiplier: float, key):
+    """Bernoulli-probability payloads: center at 0.5, clip+noise, clamp
+    back into the open unit interval so downstream KL terms stay finite."""
+    out = dp_noise_payload(probs, clip, noise_multiplier, key, center=0.5)
+    apply = (jnp.asarray(noise_multiplier, jnp.float32) > 0)
+    return jnp.where(apply, jnp.clip(out, 1e-4, 1.0 - 1e-4), probs)

@@ -1,4 +1,5 @@
-"""Shared pytest harness: multi-device CPU testing.
+"""Shared pytest harness: multi-device CPU testing, one seed knob, one
+hypothesis profile.
 
 Sharding tests need several XLA devices, which a CPU-only CI host fakes
 via ``--xla_force_host_platform_device_count`` — but that flag must be in
@@ -14,6 +15,14 @@ requested:
 The default tier-1 run stays single-device (the flag also splits the CPU
 between fake devices, which would slow every other test); ``multidevice``
 -marked tests are then skipped.
+
+Seeding: every randomised suite derives its seeds from the single
+``REPRO_TEST_SEED`` env knob through ``tests/_seeds.py`` — one variable
+re-rolls the whole battery (attack probes included) without editing any
+file.  Property tests share ONE hypothesis profile registered here
+(deadline=None — CI machines jitter; example budget via
+``REPRO_HYPOTHESIS_EXAMPLES``; derandomized for run-to-run stability)
+instead of per-file ``@settings``.
 """
 import os
 import sys
@@ -33,6 +42,17 @@ def pytest_configure(config):
         "multidevice: needs multiple (fake) XLA host devices; run with "
         "`pytest -m multidevice` (conftest then sets XLA_FLAGS) or set "
         "REPRO_HOST_DEVICES=N")
+    try:
+        from hypothesis import settings
+    except ImportError:            # optional dep — see _hypothesis_compat
+        return
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=int(os.environ.get("REPRO_HYPOTHESIS_EXAMPLES", "15")),
+        derandomize=True,
+    )
+    settings.load_profile("repro")
 
 
 def pytest_collection_modifyitems(config, items):

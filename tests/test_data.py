@@ -1,7 +1,7 @@
 """Data substrate: generators, sharding, fold discipline, determinism."""
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import given, st
 
 from repro.data import federated as fd
 from repro.data import synthetic as syn
@@ -41,7 +41,6 @@ def test_token_stream_structure():
     assert (t2[:, 1:] == (33 * t2[:, :-1] + 8) % 97).mean() > 0.8
 
 
-@settings(max_examples=15, deadline=None)
 @given(n=st.integers(40, 200), k=st.integers(2, 6), seed=st.integers(0, 50))
 def test_stratified_folds_partition(n, k, seed):
     labels = np.random.default_rng(seed).integers(0, 2, n)

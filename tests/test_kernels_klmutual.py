@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import given, st
 
 from repro.kernels import ref
 from repro.kernels.kl_mutual import kl_mutual
@@ -52,7 +52,6 @@ def test_identical_clients_zero():
     np.testing.assert_allclose(got, 0.0, atol=1e-5)
 
 
-@settings(max_examples=20, deadline=None)
 @given(K=st.integers(2, 5), B=st.integers(1, 6), V=st.integers(2, 90),
        seed=st.integers(0, 1000))
 def test_property_nonneg_and_oracle(K, B, V, seed):
@@ -179,7 +178,6 @@ def test_mutual_kl_terms_impl_switch_routes_to_kernel():
                                rtol=1e-4)
 
 
-@settings(max_examples=15, deadline=None)
 @given(K=st.integers(2, 4), B=st.integers(1, 6), V=st.integers(2, 90),
        seed=st.integers(0, 1000))
 def test_property_vjp_matches_ad(K, B, V, seed):

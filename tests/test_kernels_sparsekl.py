@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import given, st
 
 from repro.core.mutual import (sparse_kl_to_received, sparse_mutual_kl_loss,
                                topk_predictions)
@@ -78,7 +78,6 @@ def test_duplicate_indices_multiplicity():
     np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
 
 
-@settings(max_examples=15, deadline=None)
 @given(Kl=st.integers(1, 4), J=st.integers(1, 3), B=st.integers(1, 6),
        V=st.integers(4, 90), frac=st.floats(0.1, 1.0),
        seed=st.integers(0, 1000))
@@ -130,7 +129,6 @@ def test_vjp_temperature(temp):
                                atol=2e-5, rtol=1e-4)
 
 
-@settings(max_examples=10, deadline=None)
 @given(Kl=st.integers(1, 3), J=st.integers(1, 3), B=st.integers(1, 5),
        V=st.integers(4, 90), seed=st.integers(0, 1000))
 def test_property_vjp(Kl, J, B, V, seed):

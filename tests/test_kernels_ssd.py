@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import given, st
 
 from repro.kernels import ref
 from repro.kernels.ssd_scan import ssd_scan
@@ -83,7 +83,6 @@ def test_initial_state_continuation():
                                atol=1e-4, rtol=1e-4)
 
 
-@settings(max_examples=10, deadline=None)
 @given(S=st.integers(4, 40), chunk=st.sampled_from([4, 8, 16]),
        seed=st.integers(0, 100))
 def test_property_chunk_invariance(S, chunk, seed):

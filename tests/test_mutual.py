@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import given, st
 
 from repro.core import mutual
 from repro.kernels import ref
@@ -42,7 +42,6 @@ def test_gradient_pulls_towards_consensus():
     assert l1 < l0
 
 
-@settings(max_examples=25, deadline=None)
 @given(K=st.integers(2, 6), B=st.integers(1, 5), seed=st.integers(0, 99))
 def test_bernoulli_properties(K, B, seed):
     probs = jax.random.uniform(jax.random.PRNGKey(seed), (K, B),
@@ -116,7 +115,6 @@ def test_temperature_softening_reduces_kl():
 # _pair_mask invariants (partial-participation Eq.-2 averaging)
 
 
-@settings(max_examples=40, deadline=None)
 @given(K=st.integers(2, 9), m_bits=st.integers(0, 511),
        seed=st.integers(0, 100))
 def test_pair_mask_properties(K, m_bits, seed):

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import given, st
 
 from repro.configs import get_reduced
 from repro.core import mutual
@@ -50,7 +50,6 @@ def test_slot_remat_exact(arch):
     assert _max_tree_diff(g1, g2) < 1e-5
 
 
-@settings(max_examples=10, deadline=None)
 @given(S=st.integers(8, 80), bk=st.sampled_from([8, 16, 64]),
        window=st.one_of(st.none(), st.integers(1, 64)),
        seed=st.integers(0, 50))

@@ -1,0 +1,118 @@
+"""Accountant correctness: the Rényi (ε, δ) accountant against the
+closed-form single-release Gaussian bound (to 1e-6, per the acceptance
+bar), against a brute-force numeric alpha-grid oracle for compositions,
+and its inverse (``calibrate_noise``) and checkpoint round-trip.
+"""
+import math
+
+import pytest
+
+from repro.privacy import RDPAccountant, calibrate_noise, gaussian_epsilon
+
+
+# ---------------------------------------------------------------- closed form
+@pytest.mark.parametrize("sigma", [0.5, 1.0, 2.0, 4.7, 10.0])
+@pytest.mark.parametrize("delta", [1e-5, 1e-6])
+def test_single_release_matches_closed_form(sigma, delta):
+    acc = RDPAccountant()
+    acc.step(sigma)
+    assert abs(acc.epsilon(delta) - gaussian_epsilon(sigma, delta)) < 1e-6
+
+
+def test_gaussian_epsilon_closed_form_value():
+    # 1/(2σ²) + sqrt(2 log(1/δ))/σ, written out independently
+    sigma, delta = 1.3, 1e-5
+    expect = 1 / (2 * 1.3 ** 2) + math.sqrt(2 * math.log(1e5)) / 1.3
+    assert abs(gaussian_epsilon(sigma, delta) - expect) < 1e-12
+
+
+def _grid_oracle(sigmas, delta):
+    """Numeric RDP-to-DP conversion over a dense alpha grid: for the
+    composed curve eps_rdp(a) = a * S, eps = min_a a*S + log(1/δ)/(a-1)."""
+    s = sum(1.0 / (2 * x * x) for x in sigmas)
+    alphas = [1.0 + i * 1e-4 for i in range(1, 4_000_000, 37)]
+    return min(a * s + math.log(1 / delta) / (a - 1) for a in alphas)
+
+
+@pytest.mark.parametrize("sigmas", [
+    [1.0], [2.0, 2.0, 2.0], [0.8, 1.7, 3.1, 3.1, 5.0]])
+def test_composition_matches_numeric_alpha_grid(sigmas):
+    delta = 1e-5
+    acc = RDPAccountant()
+    for s in sigmas:
+        acc.step(s)
+    # the grid oracle can only be >= the analytic minimum, and close to it
+    oracle = _grid_oracle(sigmas, delta)
+    assert acc.epsilon(delta) <= oracle + 1e-9
+    assert abs(acc.epsilon(delta) - oracle) < 1e-4
+
+
+def test_releases_argument_is_plain_composition():
+    a, b = RDPAccountant(), RDPAccountant()
+    a.step(1.5, releases=7)
+    for _ in range(7):
+        b.step(1.5)
+    assert a.epsilon(1e-5) == b.epsilon(1e-5)
+    assert a.releases == b.releases == 7
+
+
+# ---------------------------------------------------------------- monotonicity
+def test_epsilon_strictly_decreasing_in_sigma():
+    delta = 1e-5
+    eps = [gaussian_epsilon(s, delta) for s in (0.5, 1.0, 2.0, 4.0, 8.0)]
+    assert all(e1 > e2 for e1, e2 in zip(eps, eps[1:]))
+
+
+def test_epsilon_monotone_in_releases():
+    acc = RDPAccountant()
+    prev = 0.0
+    for _ in range(5):
+        acc.step(2.0)
+        cur = acc.epsilon(1e-5)
+        assert cur > prev
+        prev = cur
+
+
+# ---------------------------------------------------------------- calibration
+@pytest.mark.parametrize("target,releases", [(1.0, 1), (2.5, 12), (8.0, 40)])
+def test_calibrate_noise_is_inverse(target, releases):
+    delta = 1e-5
+    sigma = calibrate_noise(target, delta, releases)
+    acc = RDPAccountant()
+    acc.step(sigma, releases=releases)
+    eps = acc.epsilon(delta)
+    assert eps <= target + 1e-6          # guarantee holds
+    assert eps > target * (1 - 1e-6)     # and is tight, not slack
+
+
+# ---------------------------------------------------------------- state & args
+def test_state_round_trip():
+    acc = RDPAccountant()
+    acc.step(1.1, releases=3)
+    acc.step(2.2, releases=5)
+    fresh = RDPAccountant()
+    fresh.load_state(acc.state())
+    assert fresh.epsilon(1e-5) == acc.epsilon(1e-5)
+    assert fresh.releases == acc.releases
+    assert fresh.state() == acc.state()
+
+
+def test_bad_arguments_raise():
+    acc = RDPAccountant()
+    with pytest.raises(ValueError):
+        acc.step(0.0)
+    with pytest.raises(ValueError):
+        acc.step(-1.0)
+    with pytest.raises(ValueError):
+        acc.epsilon(0.0)
+    with pytest.raises(ValueError):
+        gaussian_epsilon(1.0, 1.5)
+    with pytest.raises(ValueError):
+        calibrate_noise(-1.0, 1e-5, 3)
+    with pytest.raises(ValueError):
+        calibrate_noise(1.0, 1e-5, 0)
+    assert gaussian_epsilon(0.0, 1e-5) == math.inf
+
+
+def test_empty_accountant_is_free():
+    assert RDPAccountant().epsilon(1e-5) == 0.0

@@ -1,0 +1,210 @@
+"""Attack probes: unit correctness of the MIA machinery, the closed-form
+representation leak of weight uploads, and the leakage-ordering
+experiment the ISSUE's acceptance bar names —
+
+    MIA advantage:  DP-DML  <=  DML payloads  <  FedAvg weight uploads
+
+at matched task accuracy.  The e2e config (N=220, K=4, 3 rounds, 20
+local epochs, 60%-learnable/40%-random labels, advantage averaged over
+all 4 victim clients) was calibrated so the margins hold across seeds
+0-2; ``REPRO_TEST_SEED`` re-rolls it.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _seeds import TEST_SEED, derive
+
+from repro.configs.visionnet import reduced
+from repro.core import stacking
+from repro.core.api import Federation
+from repro.core.populations.vision import VisionClients
+from repro.core.strategies import get_strategy
+from repro.models.visionnet import bce_loss, init_visionnet
+from repro.privacy import (cosine_similarity, dense_features,
+                           example_gradient, features_from_grad,
+                           gradient_inversion, mia_advantage, payload_mia,
+                           payload_reconstruction, reconstruction_error,
+                           weight_upload_mia)
+from repro.privacy.attacks import (collect_client_payloads,
+                                   model_example_losses, per_example_bce)
+
+CFG = reduced().replace(image_size=16)
+
+
+# ---------------------------------------------------------------- scoring
+def test_mia_advantage_separated_is_one():
+    assert mia_advantage([5.0, 6.0, 7.0], [1.0, 2.0, 3.0]) == 1.0
+
+
+def test_mia_advantage_identical_is_chance():
+    rng = np.random.default_rng(derive("mia-chance"))
+    s = rng.normal(size=2000)
+    assert mia_advantage(s[:1000], s[1000:]) < 0.1
+
+
+def test_mia_advantage_orientation():
+    # members LOWER than non-members must score ~0, not 1 (the probe
+    # negates losses before calling this; getting the sign wrong would
+    # silently invert every conclusion)
+    assert mia_advantage([1.0, 2.0], [5.0, 6.0]) == 0.0
+
+
+def test_mia_advantage_empty_raises():
+    with pytest.raises(ValueError):
+        mia_advantage([], [1.0])
+    with pytest.raises(ValueError):
+        mia_advantage([1.0], [])
+
+
+def test_per_example_bce_matches_model_loss_mean():
+    rng = np.random.default_rng(derive("bce"))
+    p = rng.uniform(0.05, 0.95, size=64).astype(np.float32)
+    y = (rng.random(64) > 0.5).astype(np.float32)
+    per = per_example_bce(p, y)
+    assert per.shape == (64,)
+    assert abs(per.mean() - float(bce_loss(p, y))) < 1e-5
+
+
+def test_model_example_losses_batch_invariant():
+    key = jax.random.PRNGKey(derive("mel"))
+    params = init_visionnet(key, CFG)
+    imgs = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                        (37, 16, 16, 3)))
+    labs = (np.arange(37) % 2).astype(np.float32)
+    a = model_example_losses(params, CFG, imgs, labs, batch=256)
+    b = model_example_losses(params, CFG, imgs, labs, batch=8)
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+# ------------------------------------------------- representation leakage
+def test_weight_upload_leaks_features_in_closed_form():
+    """The headline gradient-leakage result: one example's gradient hands
+    over its penultimate representation exactly (h = gW[:,0]/gb[0]),
+    while a payload-distilled surrogate's features stay far off."""
+    key = jax.random.PRNGKey(derive("featleak"))
+    params = init_visionnet(key, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(derive("featleak", "x")),
+                          (1, 16, 16, 3))
+    g = example_gradient(params, CFG, x, np.array([1.0], np.float32))
+    h_true = np.asarray(dense_features(params, CFG, x))[0]
+    h_rec = features_from_grad(g)
+    assert cosine_similarity(h_true, h_rec) > 0.999
+    assert (np.linalg.norm(h_rec - h_true)
+            / (np.linalg.norm(h_true) + 1e-12)) < 1e-4
+
+    # matched payload-side baseline: an independently-initialised model
+    # (what a payload adversary distills) shares no representation
+    other = init_visionnet(jax.random.PRNGKey(derive("featleak", "sur")), CFG)
+    h_sur = np.asarray(dense_features(other, CFG, x))[0]
+    assert cosine_similarity(h_true, h_sur) < 0.8
+
+
+def test_features_from_grad_zero_signal_raises():
+    fake = {"head": {"w": np.zeros((7, 1)), "b": np.zeros((1,))}}
+    with pytest.raises(ValueError):
+        features_from_grad(fake)
+
+
+def test_gradient_inversion_fits_observed_gradient():
+    """The optimisation attack converges on the gradient-matching
+    objective (the upload tightly constrains the adversary) even though
+    VisionNet's pooled convs keep raw pixels non-unique — the assertions
+    separate those two facts."""
+    key = jax.random.PRNGKey(derive("inv"))
+    params = init_visionnet(key, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(derive("inv", "x")),
+                          (1, 16, 16, 3))
+    y = np.array([1.0], np.float32)
+    g = example_gradient(params, CFG, x, y)
+    x_rec, dist = gradient_inversion(params, CFG, g, (1, 16, 16, 3), y,
+                                     jax.random.PRNGKey(derive("inv", "k")),
+                                     steps=300)
+    assert dist < 0.2                 # objective nearly solved ...
+    assert x_rec.shape == (1, 16, 16, 3)
+    # ... while the payload-only baseline cannot even fit a meaningful
+    # objective: its reconstruction stays at chance (standardised MSE of
+    # independent Gaussians ~= 2)
+    sur = init_visionnet(jax.random.PRNGKey(derive("inv", "sur")), CFG)
+    x_pay = payload_reconstruction(CFG, sur, np.array([0.7], np.float32),
+                                   (1, 16, 16, 3),
+                                   jax.random.PRNGKey(derive("inv", "p")),
+                                   steps=100)
+    assert reconstruction_error(x_pay, np.asarray(x)) > 1.0
+
+
+def test_reconstruction_error_units():
+    rng = np.random.default_rng(derive("recerr"))
+    x = rng.normal(size=(1, 16, 16, 3))
+    assert reconstruction_error(x, x) < 1e-12
+    assert reconstruction_error(-3.0 * x + 7.0, x) < 1e-12   # affine+sign ok
+    assert reconstruction_error(rng.normal(size=x.shape), x) > 1.0
+
+
+# ------------------------------------------------------ leakage ordering
+def _mia_experiment(seed):
+    """The calibrated ordering experiment (see module docstring)."""
+    K, R, LE, BS, N = 4, 3, 20, 8, 220
+    rng = np.random.default_rng(seed)
+    imgs = rng.normal(size=(N, 16, 16, 3)).astype(np.float32)
+    labs = (imgs.mean(axis=(1, 2, 3)) > 0).astype(np.float32)
+    rand_mask = rng.random(N) < 0.4
+    labs[rand_mask] = (rng.random(int(rand_mask.sum())) > 0.5
+                       ).astype(np.float32)
+
+    def make_pop(rounds=R):
+        return VisionClients(CFG, imgs, labs, n_clients=K, rounds=rounds,
+                             local_epochs=LE, batch_size=BS, lr=0.05,
+                             seed=seed, record_payloads=True)
+
+    def mem_non(pop, client):
+        other = (client + 1) % K
+        mem = np.unique(np.concatenate([f[client] for f in pop.fold_log]))
+        non = np.setdiff1d(
+            np.unique(np.concatenate([f[other] for f in pop.fold_log])), mem)
+        return mem, non
+
+    # FedAvg upload tap: run R full rounds, then the (R+1)-th local phase
+    # is exactly the upload an eavesdropper/server observes
+    pop_fa = make_pop(rounds=R + 1)
+    Federation(pop_fa, get_strategy("fedavg")).run(until=R)
+    pop_fa.begin_round(R)
+    part = list(range(K))
+    pop_fa.local_phase(R, part, pop_fa.part_mask(part))
+    advs = []
+    for c in range(K):
+        mem, non = mem_non(pop_fa, c)
+        cp = stacking.client_slice(pop_fa.client_params, c)
+        advs.append(weight_upload_mia(cp, CFG, imgs, labs, mem, non))
+    adv_fa = float(np.mean(advs))
+
+    def payload_probe(pop):
+        advs = []
+        for c in range(K):
+            mem, non = mem_non(pop, c)
+            pi, pp = collect_client_payloads(pop.payload_log, imgs, c)
+            advs.append(payload_mia(CFG, pi, pp, imgs, labs, mem, non,
+                                    jax.random.PRNGKey(1000 + c), steps=300))
+        return float(np.mean(advs))
+
+    pop_dml = make_pop()
+    Federation(pop_dml, get_strategy("dml")).run()
+    pop_dp = make_pop()
+    Federation(pop_dp, get_strategy("dp-dml", dp_noise_multiplier=1.0)).run()
+    return adv_fa, payload_probe(pop_dml), payload_probe(pop_dp)
+
+
+def test_leakage_ordering_fedavg_worst_dp_best():
+    adv_fa, adv_dml, adv_dp = _mia_experiment(TEST_SEED)
+    # weight uploads leak decisively more than prediction payloads
+    assert adv_fa > adv_dml + 0.1, (adv_fa, adv_dml)
+    # DP noising never increases payload leakage (equality up to probe
+    # variance is allowed: payloads already sit near the chance floor)
+    assert adv_dp <= adv_dml + 0.08, (adv_dp, adv_dml)
+    # and the whole ordering is about leakage, not a broken model: the
+    # weight-upload attack actually works
+    assert adv_fa > 0.2

@@ -1,0 +1,182 @@
+"""Strategy-layer contract for the privacy battery: registry routing,
+DPDML/robust knob validation, exact no-op gating of the extended mutual
+program, comm-cost neutrality of DP noising, and checkpoint round-trips
+(bitwise resume parity, accountant state included) through Federation.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _seeds import derive
+
+from repro.api import (DML, DPDML, Federation, MedianDML, TrimmedDML,
+                       VisionClients, get_strategy)
+from repro.configs.visionnet import reduced
+from repro.core.populations.lm import LMClients
+from repro.core.strategies.base import STRATEGIES
+
+CFG = reduced().replace(image_size=16)
+
+
+def _pop(seed, rounds=2, **kw):
+    rng = np.random.default_rng(seed)
+    imgs = rng.normal(size=(240, 16, 16, 3)).astype(np.float32)
+    labs = (rng.random(240) > 0.5).astype(np.float32)
+    return VisionClients(CFG, imgs, labs, n_clients=3, rounds=rounds,
+                         local_epochs=1, batch_size=16, seed=seed, **kw)
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ----------------------------------------------------------------- registry
+def test_privacy_strategies_registered():
+    assert {"dp-dml", "trimmed-dml", "median-dml"} <= set(STRATEGIES)
+
+
+def test_get_strategy_routes_knobs():
+    s = get_strategy("dp-dml", kl_weight=2.0, dp_noise_multiplier=3.0,
+                     trim=4)                      # trim ignored for dp-dml
+    assert isinstance(s, DPDML)
+    assert s.kl_weight == 2.0 and s.dp_noise_multiplier == 3.0
+    t = get_strategy("trimmed-dml", trim=2, dp_noise_multiplier=9.0)
+    assert isinstance(t, TrimmedDML) and t.trim == 2
+    m = get_strategy("median-dml")
+    assert isinstance(m, MedianDML) and m.robust_mode == "median"
+    # the shared CLI namespace must not leak into plain DML either
+    assert isinstance(get_strategy("dml", dp_noise_multiplier=1.0), DML)
+
+
+def test_dpdml_knob_validation():
+    with pytest.raises(ValueError):
+        DPDML(dp_noise_multiplier=0.0)
+    with pytest.raises(ValueError):
+        DPDML(dp_noise_multiplier=-1.0)
+    with pytest.raises(ValueError):
+        DPDML(dp_clip=0.0)
+    with pytest.raises(ValueError):
+        TrimmedDML(trim=-1)
+
+
+def test_population_capability_gates():
+    # prediction-noising makes no sense where no per-example prediction
+    # payload exists: LMClients never advertised the new strategies
+    for name in ("dp-dml", "trimmed-dml", "median-dml"):
+        assert name not in LMClients.supported
+    # and VisionClients still rejects sparse sharing
+    pop = _pop(derive("gates"))
+    with pytest.raises(ValueError):
+        Federation(pop, get_strategy("sparse-dml", k=4))
+
+
+# ----------------------------------------------------------- exact no-ops
+def test_payload_recording_does_not_perturb_training():
+    """record_payloads routes DML through the extended mutual program
+    whose sigma=0 noise gate must be an EXACT no-op — the payload tap is
+    free."""
+    seed = derive("noop")
+    plain = Federation(_pop(seed), DML(kl_weight=1.0, mutual_epochs=2))
+    plain.run()
+    tapped_pop = _pop(seed, record_payloads=True)
+    tapped = Federation(tapped_pop, DML(kl_weight=1.0, mutual_epochs=2))
+    tapped.run()
+    _assert_tree_equal(plain.population.client_params,
+                       tapped_pop.client_params)
+    assert len(tapped_pop.payload_log) > 0
+    assert tapped_pop.payload_log[0]["payloads"].shape[1] == 3   # (E, K, B)
+
+
+def test_dp_noise_actually_changes_training():
+    seed = derive("dp-bites")
+    a = Federation(_pop(seed), DML(kl_weight=1.0, mutual_epochs=2))
+    a.run()
+    b = Federation(_pop(seed), DPDML(kl_weight=1.0, mutual_epochs=2,
+                                     dp_noise_multiplier=1.0))
+    b.run()
+    la = np.concatenate([np.asarray(x).ravel() for x in
+                         jax.tree.leaves(a.population.client_params)])
+    lb = np.concatenate([np.asarray(x).ravel() for x in
+                         jax.tree.leaves(b.population.client_params)])
+    assert not np.allclose(la, lb)
+
+
+# --------------------------------------------------------------- comm cost
+def test_dp_and_robust_comm_bytes_equal_dml():
+    """Noise and robust combining are free on the wire: same payload
+    tensor crosses client boundaries."""
+    seed = derive("comm")
+    runs = {}
+    for name, knobs in [("dml", {}), ("dp-dml", {"dp_noise_multiplier": 1.0}),
+                        ("trimmed-dml", {"trim": 1}), ("median-dml", {})]:
+        fed = Federation(_pop(seed), get_strategy(name, kl_weight=1.0,
+                                                  mutual_epochs=2, **knobs))
+        fed.run()
+        runs[name] = fed.history.total_comm_bytes
+    assert runs["dml"] > 0
+    assert len(set(runs.values())) == 1, runs
+
+
+# -------------------------------------------------------------- accounting
+def test_federation_epsilon_monotone_in_noise():
+    seed = derive("eps-mono")
+    eps = []
+    for sigma in (0.5, 1.0, 2.0):
+        fed = Federation(_pop(seed), DPDML(dp_noise_multiplier=sigma))
+        fed.run()
+        eps.append(fed.strategy.epsilon())
+    assert eps[0] > eps[1] > eps[2] > 0
+    # and the accountant saw one release per mutual epoch per round
+    assert fed.strategy.accountant.releases == 2    # 2 rounds x 1 epoch
+
+
+# ------------------------------------------------------------- checkpoints
+@pytest.mark.parametrize("name,knobs", [
+    ("dp-dml", {"dp_noise_multiplier": 1.0, "dp_clip": 2.0}),
+    ("trimmed-dml", {"trim": 1}),
+])
+def test_checkpoint_resume_is_bitwise(tmp_path, name, knobs):
+    """Interrupt/resume through Federation.save_state must replay the
+    identical noise stream and combiner: params bitwise equal to the
+    uninterrupted run, accountant curve included."""
+    seed = derive("ckpt", name)
+    mk = lambda: get_strategy(name, kl_weight=1.0, mutual_epochs=2, **knobs)
+    full = Federation(_pop(seed), mk())
+    full.run()
+
+    half = Federation(_pop(seed), mk())
+    half.run(until=1)
+    path = str(tmp_path / f"state_{name}")
+    half.save_state(path)
+
+    resumed = Federation(_pop(seed), mk())
+    resumed.restore_state(path)
+    assert resumed.round == 1
+    resumed.run()
+    _assert_tree_equal(full.population.client_params,
+                       resumed.population.client_params)
+    _assert_tree_equal(full.population.client_opts,
+                       resumed.population.client_opts)
+    assert full.history.total_comm_bytes == resumed.history.total_comm_bytes
+    if name == "dp-dml":
+        assert resumed.strategy.epsilon() == full.strategy.epsilon()
+        assert resumed.strategy.accountant.releases == \
+            full.strategy.accountant.releases
+
+
+def test_restore_rejects_dp_knob_mismatch(tmp_path):
+    seed = derive("ckpt-mismatch")
+    fed = Federation(_pop(seed), DPDML(dp_noise_multiplier=1.0))
+    fed.run(until=1)
+    path = str(tmp_path / "dp_state")
+    fed.save_state(path)
+    other = Federation(_pop(seed), DPDML(dp_noise_multiplier=2.0))
+    with pytest.raises(ValueError, match="dp_noise_multiplier"):
+        other.restore_state(path)
