@@ -40,6 +40,7 @@ DETERMINISTIC = {
     "comm_llm": ["fedavg_bytes", "dml_dense_bytes", "dml_top64_bytes"],
     "kernels": ["derived_flops", "derived_hbm_bytes"],
     "kernels_sparse": ["derived_flops", "derived_hbm_bytes", "share_bytes"],
+    "kernels_train": ["derived_flops"],
     "privacy": ["comm_bytes"],
     "privacy_dp": ["epsilon"],        # analytic accountant math — exact
 }
@@ -49,6 +50,7 @@ DETERMINISTIC = {
 WALLCLOCK = {
     "kernels": ["us_per_call"],
     "kernels_sparse": ["us_per_call"],
+    "kernels_train": ["us_per_call"],
     "sharded": ["compile_round_s", "steady_round_s"],
     "privacy": ["accuracy_pct", "mia_advantage", "epsilon"],
     "privacy_robust": ["honest_accuracy_pct"],
@@ -129,6 +131,21 @@ def check_structural(benches: Dict[str, dict], errors: List[str]) -> None:
                 errors.append(f"kernels_sparse[{impl}]: us_per_call not "
                               f"monotone as k shrinks (k pairs {bad}, "
                               f"us={us}, noise factor {NOISE})")
+    kt = benches.get("kernels", {}).get("sections", {}).get("kernels_train")
+    if kt:
+        # the fwd+bwd row must carry exactly 3x the forward FLOPs (6ND vs
+        # 2ND) — training runs full fwd+bwd through the kernel custom VJPs
+        for impl in sorted({r["impl"] for r in kt}):
+            by_step = {r["step"]: r for r in kt if r["impl"] == impl}
+            if set(by_step) != {"fwd", "fwd+bwd"}:
+                errors.append(f"kernels_train[{impl}]: expected fwd and "
+                              f"fwd+bwd rows, got {sorted(by_step)}")
+                continue
+            f, t = (by_step["fwd"]["derived_flops"],
+                    by_step["fwd+bwd"]["derived_flops"])
+            if t != 3 * f:
+                errors.append(f"kernels_train[{impl}]: fwd+bwd flops {t} "
+                              f"!= 3x fwd flops {f}")
 
 
 def _check_privacy(benches: Dict[str, dict], errors: List[str]) -> None:

@@ -464,6 +464,35 @@ def bench_kernels() -> None:
                 **_rl(flops, hbm, share),
                 vs_dense=f"{dense_us / max(us, 1e-9):.1f}x")
 
+    # -- train step vs forward step, per impl -----------------------------
+    # Since the flash-attention / SSD kernels carry custom VJPs, a training
+    # step runs the SAME impl it runs forward (no grad-time xla_flash
+    # downgrade), so the fwd+bwd rows below differentiate straight through
+    # the kernels.  derived_flops is the 2ND-forward / 6ND-train parameter
+    # model (deterministic, regression-gated); us_per_call is reported.
+    print("# kernels_train: impl,step,us_per_call,derived_flops")
+    from repro.configs import get_reduced
+    from repro.models import transformer as tfm
+
+    cfg = get_reduced("qwen3-4b")
+    Bt, St = 2, 64
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (Bt, St), 0,
+                                cfg.vocab_size)
+    params = tfm.init_model(jax.random.PRNGKey(3), cfg)
+    n_active = cfg.active_param_count()
+    reps = 2 if FAST else 5
+    for impl in ("ref", "interpret"):
+        fwd = jax.jit(lambda p, t, _i=impl: tfm.loss_fn(p, cfg, t,
+                                                        impl=_i)[0])
+        train = jax.jit(jax.grad(lambda p, t, _i=impl: tfm.loss_fn(
+            p, cfg, t, impl=_i)[0]))
+        us_f = _time_call(fwd, params, tokens, reps=reps)
+        us_t = _time_call(train, params, tokens, reps=reps)
+        row("kernels_train", impl=impl, step="fwd",
+            us_per_call=round(us_f), derived_flops=2 * n_active * Bt * St)
+        row("kernels_train", impl=impl, step="fwd+bwd",
+            us_per_call=round(us_t), derived_flops=6 * n_active * Bt * St)
+
 
 def bench_privacy() -> None:
     """Privacy & robustness battery (ISSUE 7): what each sharing strategy

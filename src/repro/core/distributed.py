@@ -88,20 +88,18 @@ def make_local_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     shared global-norm gradient clip — and their params/opt ride through
     unchanged (the same pre-grad weighting the fused DML step uses).
     """
-    model_impl = ops.model_grad_impl(impl)
     def step(stacked_params, opt_state, tokens, prefix=None,
              part_mask=None):
         def total_loss(sp):
             if prefix is None:
                 losses, metrics = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p, t: tfm.loss_fn(p, cfg, t, remat=remat,
-                                             unroll=unroll, impl=model_impl)
+                                             unroll=unroll, impl=impl)
                 )(sp, tokens)
             else:
                 losses, metrics = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p, t, pe: tfm.loss_fn(p, cfg, t, pe, remat=remat,
-                                                 unroll=unroll,
-                                                 impl=model_impl)
+                                                 unroll=unroll, impl=impl)
                 )(sp, tokens, prefix)
             pm = 1.0 if part_mask is None else jnp.asarray(part_mask,
                                                            jnp.float32)
@@ -148,7 +146,6 @@ def make_mutual_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     unchanged (the AdamW schedule step is shared fleet-wide and still
     advances).
     """
-    model_impl = ops.model_grad_impl(impl)
     def step(stacked_params, opt_state, public_tokens, public_prefix=None,
              part_mask=None):
         def total_loss(sp):
@@ -156,12 +153,12 @@ def make_mutual_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                 losses, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p: _public_ce_and_logits(p, cfg, public_tokens,
                                                     None, remat, unroll,
-                                                    model_impl))(sp)
+                                                    impl))(sp)
             else:
                 losses, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p: _public_ce_and_logits(p, cfg, public_tokens,
                                                     public_prefix, remat,
-                                                    unroll, model_impl))(sp)
+                                                    unroll, impl))(sp)
             K, B, S, V = fwd.shape
             flat = constrain(fwd.reshape(K, B * S, V), "client", None, "vocab")
             kl = _mutual_term(flat, temperature, sparse_k, part_mask,
@@ -216,34 +213,31 @@ def make_dml_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
 
     ``part_mask`` (K,) 0/1 enables partial participation (see
     ``make_mutual_step``).  ``impl`` is the kernel implementation the
-    population resolved at construction — threaded into the mixer forward
-    (``tfm.loss_fn``, downgraded via ``ops.model_grad_impl`` since the
-    attention/SSD kernels are forward-only) AND the Eq.-2 term (raw, its
-    kernels carry custom VJPs), never read from ambient state inside the
-    jitted step."""
-    model_impl = ops.model_grad_impl(impl)
+    population resolved at construction — threaded into BOTH the mixer
+    forward (``tfm.loss_fn``; the attention/SSD kernels carry custom VJPs,
+    so the same impl runs forward and backward) and the Eq.-2 term, never
+    read from ambient state inside the jitted step."""
     def step(stacked_params, opt_state, tokens, public_tokens,
              prefix=None, public_prefix=None, part_mask=None):
         def total_loss(sp):
             if prefix is None:
                 priv, pm = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p, t: tfm.loss_fn(p, cfg, t, remat=remat,
-                                             unroll=unroll, impl=model_impl)
+                                             unroll=unroll, impl=impl)
                 )(sp, tokens)
                 ce_pub, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p: _public_ce_and_logits(p, cfg, public_tokens,
                                                     None, remat, unroll,
-                                                    model_impl))(sp)
+                                                    impl))(sp)
             else:
                 priv, pm = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p, t, pe: tfm.loss_fn(p, cfg, t, pe, remat=remat,
-                                                 unroll=unroll,
-                                                 impl=model_impl)
+                                                 unroll=unroll, impl=impl)
                 )(sp, tokens, prefix)
                 ce_pub, fwd = _cvmap(spmd_axis_name=spmd_client_axis)(
                     lambda p: _public_ce_and_logits(p, cfg, public_tokens,
                                                     public_prefix, remat,
-                                                    unroll, model_impl))(sp)
+                                                    unroll, impl))(sp)
             K, B, S, V = fwd.shape
             flat = constrain(fwd.reshape(K, B * S, V), "client", None, "vocab")
             kl = _mutual_term(flat, temperature, sparse_k, part_mask,
@@ -297,7 +291,6 @@ def make_sharded_dml_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
     k_loc, k_pad = stacking.client_layout(n_clients, n_dev)
     spec = stacking.client_spec()
     opt_noclip = dataclasses.replace(opt_cfg, clip_norm=None)
-    model_impl = ops.model_grad_impl(impl)
 
     def body(params, opt, tokens, public_tokens, pm_full):
         gids = stacking.local_client_ids(n_clients, n_dev)
@@ -308,11 +301,11 @@ def make_sharded_dml_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
             priv, _ = jax.vmap(
                 lambda p, t: tfm.loss_fn(p, cfg, t, remat=remat,
                                          unroll=unroll,
-                                         impl=model_impl))(sp, tokens)
+                                         impl=impl))(sp, tokens)
             ce_pub, fwd = jax.vmap(
                 lambda p: _public_ce_and_logits(p, cfg, public_tokens,
                                                 None, remat, unroll,
-                                                model_impl))(sp)
+                                                impl))(sp)
             K_l, B, S, V = fwd.shape
             flat = fwd.reshape(K_l, B * S, V)
             gathered = stacking.gather_clients(

@@ -35,13 +35,22 @@ IMPLS = ("ref", "interpret", "pallas", "xla_flash")
 _override: Optional[str] = None
 
 
+def _check_impl(impl: str) -> str:
+    """Every ops.* entry point funnels through here: an impl string that is
+    not in ``IMPLS`` is a config bug, never a silent fallback."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown kernel impl {impl!r}; expected one "
+                         f"of {IMPLS}")
+    return impl
+
+
 def get_impl() -> str:
     return _override or os.environ.get("REPRO_KERNEL_IMPL", "ref")
 
 
 def set_impl(impl: str) -> None:
     global _override
-    assert impl in IMPLS, impl
+    _check_impl(impl)
     _override = impl
 
 
@@ -67,34 +76,15 @@ def resolve_impl(impl: Optional[str] = None) -> str:
     step factories, so the hot path never reads ambient state.
     """
     if impl and impl != "auto":
-        assert impl in IMPLS, impl
-        return impl
+        return _check_impl(impl)
     env = os.environ.get("REPRO_KERNEL_IMPL")
     if env:
-        assert env in IMPLS, env
-        return env
+        return _check_impl(env)
     import jax
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 # ---------------------------------------------------------------------------
-
-def model_grad_impl(impl: Optional[str]) -> Optional[str]:
-    """Downgrade an impl policy for DIFFERENTIATED model forwards.
-
-    The attention/SSD Pallas kernels are forward-only today (no custom
-    VJP — they serve eval/prefill/decode); the mutual-KL and sparse-KL
-    kernels DO carry streaming custom-VJP backwards.  Training step
-    factories therefore route ``model_grad_impl(impl)`` into the model
-    forward they differentiate and the raw ``impl`` into the Eq.-2 term:
-    ``pallas`` falls back to the differentiable online-softmax XLA
-    attention variant (``xla_flash``; SSD treats it as the oracle),
-    ``interpret`` to the oracle graphs.
-    """
-    if impl in ("interpret", "pallas"):
-        return "xla_flash" if impl == "pallas" else "ref"
-    return impl
-
 
 def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
               positions_q=None, positions_k=None, impl: Optional[str] = None):
@@ -102,8 +92,11 @@ def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
 
     Explicit positions (the decode/cache path) always use the oracle — the
     flash kernel serves the self-attention train/prefill hot path.
+    DIFFERENTIABLE on every impl: the flash kernel carries a custom VJP
+    (streamed recompute backward), so training steps run the same impl
+    forward and backward — there is no grad-time downgrade.
     """
-    impl = impl or get_impl()
+    impl = _check_impl(impl or get_impl())
     if positions_q is not None or positions_k is not None:
         # decode/cache path: explicit positions -> oracle
         return ref.attention(q, k, v, causal=causal, window=window,
@@ -120,7 +113,7 @@ def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
 
 def mutual_kl(logits, *, temperature: float = 1.0, impl: Optional[str] = None):
     """(K, B, V) -> (K, B) average pairwise KL (paper Eq. 2)."""
-    impl = impl or get_impl()
+    impl = _check_impl(impl or get_impl())
     if impl == "ref":
         return ref.mutual_kl(logits, temperature=temperature)
     return _kl_mutual_pallas(logits, temperature=temperature,
@@ -134,7 +127,7 @@ def mutual_kl_pair(live, fixed, pair_w, *, temperature: float = 1.0,
     a custom VJP whose backward streams over vocab blocks; 'ref' is the
     plain-JAX oracle graph (AD-derived gradients).  The Eq.-2 training
     hot path — ``core.mutual.mutual_kl_terms`` routes here."""
-    impl = impl or get_impl()
+    impl = _check_impl(impl or get_impl())
     if impl == "ref":
         return ref.mutual_kl_pair(live, fixed, pair_w,
                                   temperature=temperature)
@@ -153,7 +146,7 @@ def sparse_mutual_kl(live, idx, logp_top, pair_w, *,
     is the plain-JAX oracle graph (AD-derived gradients).  The SparseDML
     combine hot path — ``core.mutual.sparse_mutual_kl_loss`` and
     ``core.mutual.sparse_kl_to_received`` route here."""
-    impl = impl or get_impl()
+    impl = _check_impl(impl or get_impl())
     if impl == "ref":
         return ref.sparse_kl_pair(live, idx, logp_top, pair_w,
                                   temperature=temperature)
@@ -164,10 +157,15 @@ def sparse_mutual_kl(live, idx, logp_top, pair_w, *,
 
 def ssd(x, dt, A, B_mat, C_mat, *, chunk: int = 256, initial_state=None,
         impl: Optional[str] = None):
-    """Mamba2 SSD scan -> (y, final_state)."""
-    impl = impl or get_impl()
+    """Mamba2 SSD scan -> (y, final_state).
+
+    DIFFERENTIABLE on every impl: the Pallas kernel carries a custom VJP
+    (chunked reverse-scan backward).  ``initial_state`` continuation (the
+    decode/cache path) always uses the oracle.
+    """
+    impl = _check_impl(impl or get_impl())
     # "xla_flash" is an attention-only variant; SSD has no XLA-flash
-    # formulation, so the policy degrades to the oracle here
+    # formulation, so that (VALID, documented) policy runs the oracle here
     if impl in ("ref", "xla_flash") or initial_state is not None:
         return ref.ssd(x, dt, A, B_mat, C_mat, chunk=chunk,
                        initial_state=initial_state)

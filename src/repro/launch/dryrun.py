@@ -332,6 +332,32 @@ def depth_corrected_costs(cfg, shape, mesh, method,
     return out
 
 
+def model_flops_estimate(cfg, shape, method: str = "standard") -> float:
+    """Useful model FLOPs for one step of (cfg, shape, method).
+
+    The classic parameter-FLOP model: a forward pass costs 2·N·D (N =
+    active params, D = tokens) and training costs 6·N·D — forward AND
+    backward, since every kernel on the hot path (attention, SSD,
+    mutual-KL) now carries a custom VJP and trains through the same impl
+    it runs forward.  Decode shapes process one token per step; the DML /
+    mutual methods add the public-batch mutual phase (trained, so 6·N·D)
+    for k = 2 clients; fedavg_sync moves no tokens at all.
+    """
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    if method == "fedavg_sync":
+        tokens = 0
+    active = cfg.active_param_count()
+    flops_per_tok = 6 * active if shape.kind == "train" else 2 * active
+    model_flops = float(flops_per_tok) * tokens
+    if method in ("dml", "mutual"):
+        k = 2
+        pub = max(1, shape.global_batch // (4 * k)) * shape.seq_len
+        extra = 6.0 * active * pub * k        # mutual phase is trained
+        model_flops = (model_flops if method == "dml" else 0.0) + extra
+    return model_flops
+
+
 def run_case(arch: str, shape_name: str, mesh_kind: str,
              method: str = "standard", verbose: bool = True,
              skip_depth_correction: bool = False,
@@ -386,19 +412,8 @@ def run_case(arch: str, shape_name: str, mesh_kind: str,
         rec.update({k: rl[k] for k in ("t_compute", "t_memory",
                                        "t_collective", "dominant")})
 
-        # 4) useful-FLOP ratio
-        tokens = shape.global_batch * (shape.seq_len
-                                       if shape.kind != "decode" else 1)
-        if method == "fedavg_sync":
-            tokens = 0
-        model_flops = 6 * cfg.active_param_count() * tokens
-        if shape.kind != "train":
-            model_flops /= 3                      # forward-only: 2ND
-        if method in ("dml", "mutual"):
-            k = 2
-            pub = max(1, shape.global_batch // (4 * k)) * shape.seq_len
-            extra = 6 * cfg.active_param_count() * pub * k
-            model_flops = (model_flops if method == "dml" else 0.0) + extra
+        # 4) useful-FLOP ratio (2ND forward, 6ND fwd+bwd — see the helper)
+        model_flops = model_flops_estimate(cfg, shape, method)
         rec["model_flops"] = model_flops
         total_hlo = rec["flops_per_device"] * n_chips
         rec["useful_flop_ratio"] = model_flops / total_hlo if total_hlo else 0.0

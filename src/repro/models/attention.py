@@ -70,7 +70,9 @@ def attention_forward(params, cfg: ModelConfig, x, positions=None,
 
     ``impl`` selects the kernel implementation (see ``kernels.ops``);
     None defers to the ambient default — production populations pass the
-    impl they resolved at construction.
+    impl they resolved at construction.  Every impl is differentiable
+    (the flash kernel carries a custom VJP), so training steps thread the
+    SAME impl they run forward.
     """
     B, S, _ = x.shape
     if positions is None:

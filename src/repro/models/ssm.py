@@ -82,7 +82,9 @@ def mamba_forward(params, cfg: ModelConfig, u, return_state: bool = False,
     """u: (B, S, d) -> y (B, S, d) [, (conv_state, ssm_state)].
 
     ``impl`` selects the SSD kernel implementation (see ``kernels.ops``);
-    None defers to the ambient default.
+    None defers to the ambient default.  Every impl is differentiable (the
+    Pallas SSD kernel carries a custom VJP), so training steps thread the
+    SAME impl they run forward.
     """
     s, di, nh, conv_ch = _dims(cfg)
     B, S, _ = u.shape

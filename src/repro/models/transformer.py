@@ -258,7 +258,9 @@ def loss_fn(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
 
     ce_impl='chunked' streams the vocab dimension (never materialises the
     (B, S, V) logits) — the beyond-paper memory optimisation from §Perf.
-    ``impl`` selects the mixer kernel implementation (``kernels.ops``).
+    ``impl`` selects the mixer kernel implementation (``kernels.ops``);
+    every impl is differentiable (the attention/SSD kernels carry custom
+    VJPs), so train steps pass the same impl they run forward.
     """
     P = cfg.prefix_tokens if cfg.prefix_tokens else 0
     if ce_impl == "chunked":

@@ -45,3 +45,52 @@ def test_fedavg_sync_lowering():
     # the weight sync must put traffic on the pod (client) axis
     val = float(out.split("pod_axis=")[1].split()[0])
     assert val > 0
+
+
+# ---------------------------------------------------------------------------
+# FLOP cost model (direct unit tests — no subprocess needed)
+
+def test_train_flops_count_fwd_plus_bwd():
+    """Training steps cost 6·N·D (fwd+bwd), forward-only steps 2·N·D.
+
+    Every kernel impl now carries a custom VJP, so there is no grad-time
+    downgrade and the classic ratio must be exactly 3 for identical token
+    counts."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.launch.dryrun import model_flops_estimate
+
+    cfg = get_config("qwen3-4b")
+    train = ShapeConfig("t", 1024, 8, "train")
+    prefill = ShapeConfig("p", 1024, 8, "prefill")
+    ft = model_flops_estimate(cfg, train)
+    fp = model_flops_estimate(cfg, prefill)
+    assert ft == pytest.approx(3.0 * fp)
+    # and the absolute anchors: 6ND / 2ND
+    n, d = cfg.active_param_count(), 1024 * 8
+    assert ft == pytest.approx(6.0 * n * d)
+    assert fp == pytest.approx(2.0 * n * d)
+
+
+def test_flops_estimate_methods():
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.launch.dryrun import model_flops_estimate
+
+    cfg = get_config("qwen3-4b")
+    shape = ShapeConfig("t", 512, 16, "train")
+    n = cfg.active_param_count()
+    # fedavg_sync moves no tokens
+    assert model_flops_estimate(cfg, shape, "fedavg_sync") == 0.0
+    # decode shapes process one token per step, forward-only
+    dec = ShapeConfig("d", 512, 16, "decode")
+    assert model_flops_estimate(cfg, dec) == pytest.approx(2.0 * n * 16)
+    # dml = local train + mutual phase; mutual = mutual phase alone
+    k = 2
+    pub = max(1, 16 // (4 * k)) * 512
+    base = 6.0 * n * 16 * 512
+    extra = 6.0 * n * pub * k
+    assert model_flops_estimate(cfg, shape, "dml") == \
+        pytest.approx(base + extra)
+    assert model_flops_estimate(cfg, shape, "mutual") == \
+        pytest.approx(extra)

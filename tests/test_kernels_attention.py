@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
@@ -83,3 +84,130 @@ def test_oracle_cache_positions_ring_buffer():
     outm = ref.attention(q, k[:, mask], v[:, mask], causal=True,
                          positions_q=pos_q, positions_k=pos_k[:, mask])
     np.testing.assert_allclose(np.asarray(outw), np.asarray(outm), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backward: the custom VJP vs jax.grad of the oracle
+
+def _grad_pair(B, S, Hq, Hkv, hd, window, bq, bk, seed=0):
+    """(dq, dk, dv) from jax.grad of the oracle and of the flash kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    co = jax.random.normal(ks[3], (B, S, Hq, hd))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention(q, k, v, causal=True, window=window) * co)
+
+    def loss_flash(q, k, v):
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        o = flash_attention(qt, kt, vt, causal=True, window=window,
+                            block_q=bq, block_k=bk, interpret=True)
+        return jnp.sum(o.transpose(0, 2, 1, 3) * co)
+
+    want = jax.grad(loss_ref, (0, 1, 2))(q, k, v)
+    got = jax.grad(loss_flash, (0, 1, 2))(q, k, v)
+    return want, got
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd,window,bq,bk", [
+    (1, 64, 2, 2, 16, None, 32, 32),    # MHA, causal
+    (2, 96, 4, 2, 32, None, 32, 32),    # GQA 2:1
+    (1, 64, 8, 1, 8, 8, 32, 32),        # MQA + window
+    (2, 50, 4, 4, 16, None, 32, 32),    # ragged S (padding path)
+    (1, 64, 4, 2, 16, 1, 32, 32),       # window = 1
+])
+def test_backward_matches_oracle_grads(B, S, Hq, Hkv, hd, window, bq, bk):
+    want, got = _grad_pair(B, S, Hq, Hkv, hd, window, bq, bk)
+    for name, a, b in zip("qkv", want, got):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=2e-4, rtol=2e-4, err_msg=f"d{name}")
+
+
+def test_grad_through_ops_attention_interpret():
+    """ops.attention(impl='interpret') is differentiable end to end — the
+    path training steps take now that there is no grad-time downgrade."""
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 32, 2, 8))
+
+    def loss(impl):
+        return lambda x: jnp.sum(
+            ops.attention(x, x, x, causal=True, impl=impl) ** 2)
+
+    g_ref = jax.grad(loss("ref"))(q)
+    g_int = jax.grad(loss("interpret"))(q)
+    np.testing.assert_allclose(np.asarray(g_int), np.asarray(g_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# blockwise sliding-window liveness: block-skip condition vs a dense mask
+
+def _dense_window_oracle(q, k, v, window):
+    """Explicit O(S·T) masked-softmax oracle — a dense elementwise mask,
+    independent of both the kernel's block-liveness math and ref.attention's
+    position plumbing."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bksgt", qf,
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = (kpos <= qpos) & (qpos - kpos < window)
+    s = jnp.where(mask[None, None, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bksgt,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, hd)
+
+
+def _window_case(S, window, bq, bk, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (1, S, 2, 8))
+    k = jax.random.normal(ks[1], (1, S, 2, 8))
+    v = jax.random.normal(ks[2], (1, S, 2, 8))
+    co = jax.random.normal(ks[3], (1, S, 2, 8))
+
+    def loss_dense(q, k, v):
+        return jnp.sum(_dense_window_oracle(q, k, v, window) * co)
+
+    def loss_flash(q, k, v):
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        o = flash_attention(qt, kt, vt, causal=True, window=window,
+                            block_q=bq, block_k=bk, interpret=True)
+        return jnp.sum(o.transpose(0, 2, 1, 3) * co)
+
+    np.testing.assert_allclose(np.asarray(loss_flash(q, k, v)),
+                               np.asarray(loss_dense(q, k, v)),
+                               atol=1e-3, rtol=1e-5)
+    gd = jax.grad(loss_dense, (0, 1, 2))(q, k, v)
+    gf = jax.grad(loss_flash, (0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", gd, gf):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=2e-4, rtol=2e-4, err_msg=f"d{name}")
+
+
+@pytest.mark.parametrize("S,window,bq,bk", [
+    (48, 1, 16, 16),     # window = 1: diagonal only
+    (48, 48, 16, 16),    # window = seq_len: degenerates to plain causal
+    (48, 33, 16, 16),    # window % block != 0 (block-skip straddles blocks)
+    (40, 7, 16, 8),      # window < block, ragged S, asymmetric blocks
+    (48, 17, 8, 32),     # bq < window < bk
+])
+def test_window_liveness_boundaries_fwd_bwd(S, window, bq, bk):
+    """The `q_start - (k_start + bk - 1) < window` block-skip must be
+    exactly the dense per-element mask at every boundary, forward and
+    backward — a wrongly skipped live block would corrupt both."""
+    _window_case(S, window, bq, bk)
+
+
+@given(S=st.integers(4, 48), window=st.integers(1, 56),
+       bq=st.sampled_from([8, 16, 32]), bk=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 20))
+def test_property_window_liveness(S, window, bq, bk, seed):
+    """Property: blockwise liveness + per-element masking == dense mask for
+    ANY (S, window, block) combination, forward and backward."""
+    _window_case(S, window, bq, bk, seed=seed)

@@ -168,23 +168,45 @@ def test_topk_tie_breaking_deterministic():
 # ---------------------------------------------------------------------------
 # the ops impl switch + the core.mutual entry points
 
-def test_model_grad_impl_policy():
-    """Forward-only model kernels (attention/SSD) must be downgraded to a
-    differentiable variant inside training steps; mutual/sparse-KL kernels
-    train through their custom VJPs and keep the raw impl."""
-    assert ops.model_grad_impl("pallas") == "xla_flash"
-    assert ops.model_grad_impl("interpret") == "ref"
-    assert ops.model_grad_impl("ref") == "ref"
-    assert ops.model_grad_impl("xla_flash") == "xla_flash"
-    assert ops.model_grad_impl(None) is None
+def test_no_model_grad_impl_downgrade():
+    """Every model kernel now carries a custom VJP, so the grad-time
+    downgrade hook must be gone: training steps thread the impl they were
+    given, unchanged."""
+    assert not hasattr(ops, "model_grad_impl")
+
+
+def test_unknown_impl_raises_at_every_entry_point():
+    """ops.* must validate impl against IMPLS and raise — 'xla_flush' must
+    never silently run the oracle (regression: ops.ssd treated any unknown
+    impl as pallas-eligible / ref)."""
+    q = jnp.zeros((1, 4, 2, 8))
+    x = jnp.zeros((1, 8, 2, 4))
+    dt = jnp.ones((1, 8, 2))
+    A = -jnp.ones((2,))
+    Bm = jnp.zeros((1, 8, 1, 4))
+    logits = jnp.zeros((2, 3, 16))
+    w = jnp.ones((2, 2)) / 2
+    idx = jnp.zeros((2, 3, 4), jnp.int32)
+    lp = jnp.zeros((2, 3, 4))
+    calls = [
+        lambda: ops.attention(q, q, q, impl="xla_flush"),
+        lambda: ops.ssd(x, dt, A, Bm, Bm, impl="xla_flush"),
+        lambda: ops.mutual_kl(logits, impl="cuda"),
+        lambda: ops.mutual_kl_pair(logits, logits, w, impl="cuda"),
+        lambda: ops.sparse_mutual_kl(logits, idx, lp, w, impl="cuda"),
+        lambda: ops.set_impl("nope"),
+        lambda: ops.resolve_impl("nope"),
+    ]
+    for call in calls:
+        with pytest.raises(ValueError, match="unknown kernel impl"):
+            call()
 
 
 def test_local_train_step_differentiable_under_interpret():
-    """make_local_train_step(impl='interpret') must not differentiate
-    through the forward-only attention/SSD Pallas kernels (regression for
-    the _pallas_call_jvp_rule AssertionError) — the factory downgrades the
-    model forward via ops.model_grad_impl while keeping the raw impl for
-    the custom-VJP mutual kernels."""
+    """make_local_train_step(impl='interpret') differentiates straight
+    through the attention/SSD Pallas kernels (their custom VJPs; formerly
+    a downgrade to 'ref' — regression for the _pallas_call_jvp_rule
+    AssertionError)."""
     from repro.configs import get_reduced
     from repro.core import distributed as D
     from repro.optim import AdamWConfig
