@@ -5,9 +5,13 @@ Two jobs, one tool:
   1. STRUCTURAL invariants of a single results dir (always checked):
      bitwise-parity flags true, sparse share_bytes < dense, the sparse
      mutual-step series monotone in k (wall-clock with a noise factor,
-     the derived FLOP/HBM/wire models strictly), and the privacy
+     the derived FLOP/HBM/wire models strictly), the privacy
      battery's orderings (fedavg leaks most, epsilon monotone in
-     sigma/releases, robust combiners beat poisoned plain DML).
+     sigma/releases, robust combiners beat poisoned plain DML), and the
+     serving engine's guarantees (dispatches per generate constant in
+     gen_len; ensemble-average bitwise vs the vmapped oracle; fused
+     decode token-parity with the legacy loop; steady-state tokens/s
+     improves with batch for at least one arch).
   2. REGRESSION vs a committed baseline (when --current is given):
      deterministic tracked metrics (comm bytes, dispatch counts, derived
      FLOP/byte models) may not grow more than --tol (default 20%).
@@ -43,6 +47,8 @@ DETERMINISTIC = {
     "kernels_train": ["derived_flops"],
     "privacy": ["comm_bytes"],
     "privacy_dp": ["epsilon"],        # analytic accountant math — exact
+    "decode": ["decode_dispatches"],  # device programs per generate call
+    "decode_dispatch": ["dispatches"],
 }
 # machine-dependent columns: never gated, reported as info.  The privacy
 # battery's accuracy/advantage columns are run-volatile (tiny synthetic
@@ -54,10 +60,12 @@ WALLCLOCK = {
     "sharded": ["compile_round_s", "steady_round_s"],
     "privacy": ["accuracy_pct", "mia_advantage", "epsilon"],
     "privacy_robust": ["honest_accuracy_pct"],
+    "decode": ["compile_s", "steady_tok_s", "p50_ms", "p99_ms"],
 }
 # columns that must be truthy in the CURRENT run (parity guarantees)
 MUST_BE_TRUE = {
     "api": ["bitwise_vs_legacy"],
+    "decode_parity": ["ok"],
 }
 # wall-clock noise factor for the monotone-in-k check: a smaller-k sparse
 # step may be at most this much slower than the next-larger-k one
@@ -131,6 +139,30 @@ def check_structural(benches: Dict[str, dict], errors: List[str]) -> None:
                 errors.append(f"kernels_sparse[{impl}]: us_per_call not "
                               f"monotone as k shrinks (k pairs {bad}, "
                               f"us={us}, noise factor {NOISE})")
+    dd = benches.get("decode", {}).get("sections", {})
+    if dd.get("decode_dispatch"):
+        # the O(1) claim: dispatches per generate must not depend on gen_len
+        series: Dict[Tuple, Dict] = {}
+        for r in dd["decode_dispatch"]:
+            series.setdefault((r["arch"], r["models"]),
+                              {})[int(r["gen_len"])] = int(r["dispatches"])
+        for key, by_gl in series.items():
+            if len(set(by_gl.values())) != 1:
+                errors.append(f"decode_dispatch{key}: dispatches vary with "
+                              f"gen_len: {by_gl} — decode is not a single "
+                              "fused program")
+    if dd.get("decode"):
+        # batching must pay off: steady tokens/s at the largest batch must
+        # beat batch=1 for at least one (arch, models) series
+        gains = {}
+        for r in dd["decode"]:
+            gains.setdefault((r["arch"], r["models"]),
+                             {})[int(r["batch"])] = float(r["steady_tok_s"])
+        improved = [k for k, by_b in gains.items()
+                    if len(by_b) >= 2 and by_b[max(by_b)] > by_b[min(by_b)]]
+        if not improved:
+            errors.append(f"decode: steady_tok_s does not improve with "
+                          f"batch for ANY arch: {gains}")
     kt = benches.get("kernels", {}).get("sections", {}).get("kernels_train")
     if kt:
         # the fwd+bwd row must carry exactly 3x the forward FLOPs (6ND vs

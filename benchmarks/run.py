@@ -17,6 +17,10 @@
                  MIA-advantage per strategy, the accountant's analytic
                  epsilon curve, and honest accuracy under a colluding
                  client for plain vs trimmed/median DML
+  bench_decode   serving engine: steady-state decode tokens/s + p50/p99
+                 per-token latency vs batch x model-count x arch, with
+                 the O(1)-dispatch, legacy-token-parity and bitwise
+                 ensemble-average gates as structural rows
 
 Output: CSV-ish lines on stdout (``name,col,col,...``) AND a
 machine-readable ``BENCH_<table>.json`` per bench next to them (--out-dir,
@@ -635,6 +639,133 @@ def bench_privacy() -> None:
             honest_accuracy_pct=round(100 * honest, 2))
 
 
+def bench_decode() -> None:
+    """Serving decode (the serving-subsystem tentpole): steady-state
+    tokens/s + per-token latency vs batch x model-count x arch, and the
+    engine's structural guarantees as gated rows —
+
+      decode          throughput/latency grid.  ``decode_dispatches`` is
+                      the per-generate device-program count (gated
+                      deterministically); compile/steady/p50/p99 are
+                      wall-clock info.  p50/p99 time the SINGLE-step
+                      decode program (the chunk=1 continuous-serving
+                      dispatch); steady_tok_s times the fused full-length
+                      scan.
+      decode_dispatch dispatches per generate at two gen_lens — the O(1)
+                      claim: equal counts regardless of gen_len
+                      (structural).
+      decode_parity   ok-flag rows (MUST_BE_TRUE): fused-scan tokens ==
+                      legacy per-token Python loop; ensemble-average
+                      logits bitwise == the standalone vmapped oracle.
+    """
+    from repro.configs import get_reduced
+    from repro.launch.serve import greedy_generate
+    from repro.models import transformer as tfm
+    from repro.serve import ServeEngine
+
+    GEN, MAX_SEQ, S0 = 16, 64, 8
+    reps = 3 if FAST else 10
+    lat_reps = 8 if FAST else 30
+    grid = [("qwen3-4b", 1), ("mamba2-780m", 1), ("qwen3-4b", 3)]
+    rng = np.random.default_rng(0)
+
+    def make(arch, models):
+        cfg = get_reduced(arch)
+        if models == 1:
+            return cfg, tfm.init_model(jax.random.PRNGKey(0), cfg), "single"
+        params = jax.vmap(lambda k: tfm.init_model(k, cfg))(
+            jax.random.split(jax.random.PRNGKey(0), models))
+        return cfg, params, "average"
+
+    print("\n# decode: arch,models,batch,gen_len,decode_dispatches,"
+          "compile_s,steady_tok_s,p50_ms,p99_ms")
+    for arch, models in grid:
+        cfg, params, mode = make(arch, models)
+        for batch in (1, 2, 4):
+            prompts = rng.integers(0, cfg.vocab_size,
+                                   (batch, S0)).astype(np.int32)
+            eng = ServeEngine(cfg, params, mode=mode, slots=batch,
+                              max_seq=MAX_SEQ)
+            t0 = time.perf_counter()
+            eng.generate(prompts, GEN)
+            compile_s = time.perf_counter() - t0
+            n0 = len(eng.dispatch_log)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                eng.generate(prompts, GEN)
+            steady = (time.perf_counter() - t0) / reps
+            disp = (len(eng.dispatch_log) - n0) // reps
+            # per-token latency distribution: the chunk=1 decode program
+            lg, cache = eng._prefill_prog()(eng.params,
+                                            jnp.asarray(prompts), None)
+            cidx = jnp.zeros((batch,), jnp.int32)
+            key = jax.random.PRNGKey(0)
+            tok0, _ = eng._first_token_prog()(lg, cidx, key)
+            sd = eng._decode_prog(1)
+            out = sd(eng.params, tok0[:, None], cache, jnp.int32(S0), key,
+                     cidx)
+            jax.block_until_ready(out[0])              # compile
+            lats = []
+            tok, cache, pos, key = out[3], out[2], out[4], out[5]
+            for _ in range(lat_reps):
+                t1 = time.perf_counter()
+                out = sd(eng.params, tok, cache, pos, key, cidx)
+                jax.block_until_ready(out[0])
+                lats.append((time.perf_counter() - t1) * 1e3)
+                tok, cache, pos, key = out[3], out[2], out[4], out[5]
+            row("decode", arch=arch, models=models, batch=batch,
+                gen_len=GEN, decode_dispatches=disp,
+                compile_s=round(compile_s, 2),
+                steady_tok_s=round(batch * GEN / steady, 1),
+                p50_ms=round(float(np.percentile(lats, 50)), 3),
+                p99_ms=round(float(np.percentile(lats, 99)), 3))
+
+    print("# decode_dispatch: arch,models,gen_len,dispatches")
+    for arch, models in grid:
+        cfg, params, mode = make(arch, models)
+        prompts = rng.integers(0, cfg.vocab_size, (2, S0)).astype(np.int32)
+        for gl in (4, 16):
+            eng = ServeEngine(cfg, params, mode=mode, slots=2,
+                              max_seq=MAX_SEQ)
+            eng.generate(prompts, gl)
+            row("decode_dispatch", arch=arch, models=models, gen_len=gl,
+                dispatches=len(eng.dispatch_log))
+
+    print("# decode_parity: arch,models,check,ok")
+    for arch, models in grid[:2]:
+        cfg, params, mode = make(arch, models)
+        prompts = rng.integers(0, cfg.vocab_size, (2, S0)).astype(np.int32)
+        eng = ServeEngine(cfg, params, mode=mode, slots=2, max_seq=MAX_SEQ)
+        legacy = np.asarray(greedy_generate(cfg, params,
+                                            jnp.asarray(prompts), GEN))
+        ok = bool(np.array_equal(eng.generate(prompts, GEN), legacy))
+        row("decode_parity", arch=arch, models=models,
+            check="tokens_match_legacy", ok=ok)
+    # ensemble-average bitwise vs the independently-jitted vmapped oracle
+    arch, models = grid[2]
+    cfg, params, _ = make(arch, models)
+    prompts = rng.integers(0, cfg.vocab_size, (2, S0)).astype(np.int32)
+    eng = ServeEngine(cfg, params, mode="average", slots=2, max_seq=MAX_SEQ)
+    G = 5
+    toks, lg = eng.generate(prompts, G, return_logits=True)
+    pre = jax.jit(lambda ps, t: jax.vmap(
+        lambda p: tfm.prefill(p, cfg, t, None, max_seq=MAX_SEQ))(ps))
+    step = jax.jit(lambda ps, tok, c, pos: (
+        lambda lc: (jnp.mean(lc[0], axis=0), lc[1]))(
+            jax.vmap(lambda p, cc: tfm.decode_step(p, cfg, tok, cc, pos))(
+                ps, c)))
+    l0, cache = pre(params, jnp.asarray(prompts))
+    tok = jnp.argmax(jnp.mean(l0, 0), -1)[:, None].astype(jnp.int32)
+    ok = True
+    for t in range(G):
+        ok &= bool(np.array_equal(np.asarray(tok[:, 0]), toks[:, t]))
+        lo, cache = step(params, tok, cache, jnp.int32(S0 + t))
+        ok &= bool(np.array_equal(np.asarray(lo), lg[:, t]))
+        tok = jnp.argmax(lo, -1)[:, None].astype(jnp.int32)
+    row("decode_parity", arch=arch, models=models,
+        check="bitwise_ensemble_avg_vs_oracle", ok=ok)
+
+
 BENCHES = {
     "table2": bench_table2,
     "history": bench_history,
@@ -646,6 +777,7 @@ BENCHES = {
     "sharded": bench_sharded,
     "kernels": bench_kernels,
     "privacy": bench_privacy,
+    "decode": bench_decode,
 }
 
 

@@ -162,6 +162,26 @@ class Federation:
             meta["strategy_state"] = self.strategy.state_dict()
         checkpoint.save(path, self.population.state_dict(), meta)
 
+    def export_for_serving(self, path: str) -> None:
+        """Write the slim serving artifact: client params only (no
+        optimiser moments, PRNG state or fold cursors — typically ~1/3
+        the bytes of ``save_state``) plus the meta the serving engine
+        needs to rebuild the config (``engine``/``arch``/``n_clients``).
+        ``ServeEngine.from_checkpoint`` / ``launch.serve --ckpt`` read
+        both this artifact and full ``save_state`` files."""
+        state = self.population.state_dict()
+        if "client_params" not in state:
+            raise ValueError(
+                f"population {self.population.engine_name!r} does not "
+                "expose a stacked 'client_params' pytree; only the LM "
+                "population is servable (hetero checkpoints one pytree "
+                "per arch)")
+        meta = {k: v for k, v in self.population.meta_dict().items()
+                if k in ("engine", "arch", "n_clients")}
+        meta["round"] = self.round
+        checkpoint.save(path, {"client_params": state["client_params"]},
+                        meta)
+
     def restore_state(self, path: str) -> None:
         """Load a ``save_state`` checkpoint — including files written by
         the pre-API ``FederatedTrainer``/``HeteroTrainer`` — into this

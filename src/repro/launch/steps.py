@@ -44,6 +44,61 @@ def make_decode_step(cfg: ModelConfig, window: Optional[int] = None,
     return step
 
 
+def sample_token(logits, key, temperature: float = 0.0, top_k: int = 0):
+    """One sampled token id per row of ``logits`` (B, V).
+
+    temperature <= 0 is EXACT greedy (argmax, no PRNG consumed at trace
+    level but the caller still threads the key so chunked and one-shot
+    decodes stay bit-identical); otherwise temperature-scaled categorical
+    sampling, optionally restricted to the top-k logits.  temperature and
+    top_k are trace-time constants (they key the jit cache).
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def make_multistep_decode(cfg: ModelConfig, gen_len: int,
+                          window: Optional[int] = None,
+                          temperature: float = 0.0, top_k: int = 0,
+                          unroll: bool = False):
+    """``gen_len`` decode steps in ONE jitted program (``lax.scan`` over
+    tokens, in-place cache updates at fixed shapes — no per-token Python
+    dispatch).
+
+    The returned step takes ``(params, token, cache, pos, key)`` where
+    ``token`` (B, 1) is the next token to EMIT (the one sampled from the
+    previous logits — after prefill, sample the prefill logits), ``pos``
+    is scalar or (B,) per-slot positions of that emission, and ``key`` is
+    the sampling PRNG state (split once per step inside the scan, so a
+    fixed seed is deterministic and chunked calls chain bit-identically).
+
+    Returns ``(tokens (B, gen_len), logits (B, gen_len, V), cache,
+    next_token (B, 1), next_pos, key)`` — token/position/key carry-out
+    lets a scheduler chain chunks: feeding them into the next call
+    continues exactly where a single longer scan would have been.
+    ``logits[:, t]`` are the distribution the (t+1)-th emission was
+    sampled from, aligned with the teacher-forced full forward at the
+    same absolute positions (the cache-parity tests pin this).
+    """
+    def step(params, token, cache, pos, key):
+        def body(carry, _):
+            tok, cache, p, k = carry
+            logits, cache = tfm.decode_step(params, cfg, tok, cache, p,
+                                            window=window, unroll=unroll)
+            k, sub = jax.random.split(k)
+            nxt = sample_token(logits, sub, temperature, top_k)
+            return (nxt[:, None], cache, p + 1, k), (tok[:, 0], logits)
+        (tok, cache, pos, key), (toks, logits) = jax.lax.scan(
+            body, (token, cache, pos, key), None, length=gen_len)
+        return (toks.T, logits.transpose(1, 0, 2), cache, tok, pos, key)
+    return step
+
+
 def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
     """Long-context policy: dense archs use the sliding-window variant at
     500k (DESIGN.md §5); native sub-quadratic archs keep their own setting."""

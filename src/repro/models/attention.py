@@ -112,22 +112,34 @@ def kv_cache_logical_axes():
 
 def attention_decode(params, cfg: ModelConfig, x, cache, pos,
                      window: Optional[int] = None):
-    """One-token decode.  x: (B, 1, d); pos: scalar int32 (tokens so far).
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 (tokens so far),
+    or a (B,) vector of PER-SEQUENCE positions (the serving arena: slots
+    admitted mid-flight sit at heterogeneous depths).
 
     Returns (y (B, 1, d), updated cache).
     """
     B = x.shape[0]
     if window is None:
         window = cfg.sliding_window
-    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
+    positions = (pos[:, None] if per_slot
+                 else jnp.broadcast_to(pos[None, None], (B, 1))
+                 ).astype(jnp.int32)
     q, k, v = _project_qkv(params, cfg, x, positions)
 
     size = cache["k"].shape[1]
     slot = (pos % size).astype(jnp.int32)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    pos_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), slot, axis=1)
+    if per_slot:
+        bidx = jnp.arange(B)
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        pos_cache = cache["pos"].at[bidx, slot].set(positions[:, 0])
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        pos_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), slot, axis=1)
     k_cache = constrain(k_cache, "batch", "kv_seq", "kv_heads", None)
     v_cache = constrain(v_cache, "batch", "kv_seq", "kv_heads", None)
 

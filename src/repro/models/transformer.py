@@ -375,7 +375,9 @@ def prefill(params, cfg: ModelConfig, tokens, prefix_emb=None, *,
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, *,
                 window: Optional[int] = None, unroll: bool = False):
-    """One decode step.  token: (B, 1) int32; pos: scalar int32.
+    """One decode step.  token: (B, 1) int32; pos: scalar int32, or a
+    (B,) int32 vector of per-sequence positions (the serving arena path —
+    see ``attention_decode``; SSM state is position-free either way).
 
     Returns (logits (B, V), new cache).
     """

@@ -1,0 +1,13 @@
+"""Serving subsystem: continuous-batching ensemble inference over trained
+Federations.  See docs/SERVING.md for the architecture."""
+from repro.serve.cache import batch_axis, init_arena, write_slot
+from repro.serve.engine import MODES, ServeEngine
+from repro.serve.ensemble import (combine_logits, load_serving_params,
+                                  make_router, prompt_ce)
+from repro.serve.scheduler import Request, SlotScheduler
+
+__all__ = [
+    "MODES", "ServeEngine", "SlotScheduler", "Request",
+    "batch_axis", "init_arena", "write_slot",
+    "combine_logits", "load_serving_params", "make_router", "prompt_ce",
+]

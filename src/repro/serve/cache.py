@@ -1,0 +1,53 @@
+"""Slot arena: the fixed-shape KV/SSM cache the serving engine decodes in.
+
+The arena is one cache pytree at a FIXED (slots, max_seq) shape — ensemble
+modes add a leading ``n_models`` axis — so the multi-step decode program
+compiles once and every admission/retirement is a slot write, never a
+reshape.  Attention layers hold a ring buffer of ``min(window, max_seq)``
+keys with absolute positions (unwritten entries are -1 and masked out);
+Mamba layers hold constant-size (conv, ssm) state.  Both are fully
+overwritten by ``write_slot`` at admission, so a retired request leaves
+nothing behind for the slot's next tenant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+def batch_axis(n_models: int) -> int:
+    """Axis carrying the slot (batch) dimension in every arena leaf: cache
+    leaves are (n_periods, B, ...), plus a leading client axis when the
+    engine serves an ensemble."""
+    return 2 if n_models else 1
+
+
+def init_arena(cfg: ModelConfig, slots: int, max_seq: int,
+               window: Optional[int] = None, n_models: int = 0):
+    """Empty arena: ``n_models`` = 0 means a single model (no client axis);
+    otherwise every leaf gains a leading stacked-client axis."""
+    one = tfm.init_cache(cfg, slots, max_seq, window=window)
+    if not n_models:
+        return one
+    return jax.tree.map(
+        lambda t: jax.numpy.broadcast_to(t, (n_models,) + t.shape).copy(),
+        one)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def write_slot(arena, one, slot, *, axis: int = 1):
+    """Insert a freshly prefilled single-request cache into arena slot
+    ``slot`` (traced — ONE compiled program serves every slot index).
+
+    ``one`` is the same pytree with a size-1 batch axis (a B=1 prefill);
+    ``axis`` is the arena's batch axis (``batch_axis(n_models)``).
+    """
+    def put(a, o):
+        return jax.lax.dynamic_update_index_in_dim(
+            a, jax.lax.index_in_dim(o, 0, axis, keepdims=False), slot, axis)
+    return jax.tree.map(put, arena, one)

@@ -1,0 +1,290 @@
+"""The batched serving engine: continuous batching + jitted multi-step
+decode over trained ``Federation`` populations.
+
+One ``ServeEngine`` owns a fixed-shape cache arena (``serve.cache``), a
+host-side slot scheduler (``serve.scheduler``), and a small set of jitted
+programs cached by shape:
+
+  prefill[S0]      prompt ingestion at the request's prompt length
+                   (compiled once per DISTINCT length, not per request)
+  router[S0]       route mode only: per-client prompt CE -> argmin client
+  first_token      sample the first emission from the prefill logits
+  decode[T]        T decode steps in ONE program — ``lax.scan`` over
+                   tokens with in-place ring/SSM cache updates; in
+                   ensemble modes each step vmaps the K stacked clients
+                   and samples from the combined logits
+
+so the number of device dispatches for a generation is CONSTANT in
+``gen_len`` (``generate``: prefill + first_token + one decode scan), and
+the continuous-batching loop (``submit``/``run``) re-dispatches the SAME
+compiled ``decode[chunk]`` program between admissions — requests join and
+retire mid-flight with zero recompilation.
+
+Sampling: ``temperature``/``top_k`` are engine-level trace-time constants
+(greedy == ``temperature=0`` is the exact-argmax special case); the PRNG
+key is split once per step inside the scan, so a fixed ``seed`` makes
+every schedule deterministic and chunked decodes chain bit-identically
+with one longer scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import sample_token
+from repro.models import transformer as tfm
+from repro.serve import cache as cache_mod
+from repro.serve.ensemble import (combine_logits, load_serving_params,
+                                  make_router)
+from repro.serve.scheduler import SlotScheduler
+
+MODES = ("single", "average", "route")
+
+
+class ServeEngine:
+    """Serve one model or a stacked K-client ensemble.
+
+    ``params``: a plain model pytree (``mode='single'``) or the stacked
+    (K, ...) client pytree of a trained LM population (ensemble modes).
+    ``slots`` x ``max_seq`` fixes the arena shape — every admitted
+    request must satisfy ``prefix + len(prompt) + max_new <= max_seq``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, mode: str = "single",
+                 slots: int = 4, max_seq: int = 128,
+                 window: Optional[int] = None, temperature: float = 0.0,
+                 top_k: int = 0, chunk: int = 8, seed: int = 0):
+        if mode not in MODES:
+            raise ValueError(f"mode {mode!r} not in {MODES}")
+        lead = jax.tree.leaves(params)[0].ndim
+        stacked = mode != "single"
+        if stacked:
+            ks = {int(x.shape[0]) for x in jax.tree.leaves(params)}
+            if len(ks) != 1:
+                raise ValueError(
+                    f"ensemble mode {mode!r} needs params stacked on a "
+                    f"uniform leading client axis, got sizes {sorted(ks)}")
+        del lead
+        self.cfg = cfg
+        self.params = params
+        self.mode = mode
+        self.n_models = (int(jax.tree.leaves(params)[0].shape[0])
+                         if stacked else 1)
+        self.slots = slots
+        self.max_seq = max_seq
+        self.window = window
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.chunk = int(chunk)
+        self.seed = seed
+        self.scheduler = SlotScheduler(slots)
+        self.dispatch_log: List[str] = []     # one entry per device program
+        self._progs: dict = {}
+        self._arena = None
+        self._tok = self._pos = self._cidx = self._key = None
+
+    @classmethod
+    def from_checkpoint(cls, path: str, *, mode: str = "average",
+                        client: int = 0, **kw) -> "ServeEngine":
+        """Build an engine straight from a training checkpoint (the
+        ``Federation`` LM population's ``save_state`` /
+        ``export_for_serving`` file, or a single-model ``--save`` file).
+        ``mode='single'`` serves ``client`` of the stacked population."""
+        cfg, params, n_clients = load_serving_params(path)
+        if mode == "single":
+            params = jax.tree.map(lambda t: jnp.asarray(t)[client], params)
+        else:
+            params = jax.tree.map(jnp.asarray, params)
+        eng = cls(cfg, params, mode=mode, **kw)
+        eng.n_checkpoint_clients = n_clients
+        return eng
+
+    # -- jitted programs (shape-cached) -----------------------------------
+    def _call(self, name, fn, *args):
+        self.dispatch_log.append(name)
+        return fn(*args)
+
+    @property
+    def _prefix_P(self) -> int:
+        return self.cfg.prefix_tokens if self.cfg.prefix_tokens else 0
+
+    def _raw_decode(self, params, tok, cache, pos):
+        """One decode step -> ((K,) B, V) logits + updated cache; ensemble
+        modes vmap the stacked client axis (token/pos shared)."""
+        if self.mode == "single":
+            return tfm.decode_step(params, self.cfg, tok, cache, pos,
+                                   window=self.window)
+        return jax.vmap(lambda p, c: tfm.decode_step(
+            p, self.cfg, tok, c, pos, window=self.window))(params, cache)
+
+    def _combine(self, logits, client_idx):
+        if self.mode == "single":
+            return logits
+        return combine_logits(
+            logits, "average" if self.mode == "average" else "route",
+            client_idx)
+
+    def _prefill_prog(self):
+        if "prefill" not in self._progs:
+            def pre(params, prompts, prefix):
+                if self.mode == "single":
+                    return tfm.prefill(params, self.cfg, prompts, prefix,
+                                       max_seq=self.max_seq,
+                                       window=self.window)
+                return jax.vmap(lambda p: tfm.prefill(
+                    p, self.cfg, prompts, prefix, max_seq=self.max_seq,
+                    window=self.window))(params)
+            self._progs["prefill"] = jax.jit(pre)
+        return self._progs["prefill"]
+
+    def _router_prog(self):
+        if "router" not in self._progs:
+            self._progs["router"] = jax.jit(make_router(self.cfg))
+        return self._progs["router"]
+
+    def _first_token_prog(self):
+        if "first" not in self._progs:
+            def first(logits, client_idx, key):
+                comb = self._combine(logits, client_idx)
+                return sample_token(comb, key, self.temperature,
+                                    self.top_k), comb
+            self._progs["first"] = jax.jit(first)
+        return self._progs["first"]
+
+    def _decode_prog(self, gen_len: int):
+        key = ("decode", gen_len)
+        if key not in self._progs:
+            def step(params, token, cache, pos, prng, client_idx):
+                def body(carry, _):
+                    tok, cache, p, k = carry
+                    logits, cache = self._raw_decode(params, tok, cache, p)
+                    comb = self._combine(logits, client_idx)
+                    k, sub = jax.random.split(k)
+                    nxt = sample_token(comb, sub, self.temperature,
+                                       self.top_k)
+                    return (nxt[:, None], cache, p + 1, k), (tok[:, 0], comb)
+                (tok, cache, pos, prng), (toks, logits) = jax.lax.scan(
+                    body, (token, cache, pos, prng), None, length=gen_len)
+                return (toks.T, logits.transpose(1, 0, 2), cache, tok, pos,
+                        prng)
+            self._progs[key] = jax.jit(step)
+        return self._progs[key]
+
+    def oracle_step(self, tok, cache, pos, client_idx=None):
+        """The UN-fused one-step reference the bench gates against: the
+        same vmapped per-client decode + ``combine_logits`` expression,
+        dispatched standalone instead of inside the decode scan."""
+        logits, cache = self._raw_decode(self.params, tok, cache, pos)
+        return self._combine(logits, client_idx), cache
+
+    # -- one-shot batch API (O(1) dispatches in gen_len) ------------------
+    def generate(self, prompts, gen_len: int, prefix=None,
+                 seed: Optional[int] = None, return_logits: bool = False):
+        """Generate ``gen_len`` tokens for a fixed prompt batch (B, S0).
+
+        Exactly prefill + first_token + one multi-step decode scan
+        (+ router in route mode) — the dispatch count does not depend on
+        ``gen_len``.  Greedy (temperature=0) output is token-identical
+        to the legacy per-token Python loop.
+        """
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B, S0 = prompts.shape
+        P = self._prefix_P
+        if P + S0 + gen_len > self.max_seq:
+            raise ValueError(f"prefix {P} + prompt {S0} + gen {gen_len} "
+                             f"exceeds max_seq {self.max_seq}")
+        cidx = jnp.zeros((B,), jnp.int32)
+        if self.mode == "route":
+            cidx, _ = self._call("router", self._router_prog(),
+                                 self.params, prompts, prefix)
+        logits, cache = self._call("prefill", self._prefill_prog(),
+                                   self.params, prompts, prefix)
+        key = jax.random.PRNGKey(self.seed if seed is None else seed)
+        key, sub = jax.random.split(key)
+        tok0, _ = self._call("first_token", self._first_token_prog(),
+                             logits, cidx, sub)
+        toks, lg, _, _, _, _ = self._call(
+            "decode", self._decode_prog(gen_len), self.params,
+            tok0[:, None], cache, jnp.int32(P + S0), key, cidx)
+        if return_logits:
+            return np.asarray(toks), np.asarray(lg)
+        return np.asarray(toks)
+
+    # -- continuous batching ----------------------------------------------
+    def submit(self, tokens, max_new: int, prefix=None) -> int:
+        """Queue one request; returns its request id."""
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 1 or not len(tokens):
+            raise ValueError("submit takes a single 1-D prompt")
+        P = self._prefix_P
+        if P + len(tokens) + max_new > self.max_seq:
+            raise ValueError(f"prefix {P} + prompt {len(tokens)} + max_new "
+                             f"{max_new} exceeds max_seq {self.max_seq}")
+        if P and prefix is None:
+            raise ValueError(f"{self.cfg.name} needs a (P, prefix_dim) "
+                             "prefix embedding per request")
+        return self.scheduler.submit(tokens, max_new, prefix)
+
+    def _ensure_arena(self):
+        if self._arena is None:
+            self._arena = cache_mod.init_arena(
+                self.cfg, self.slots, self.max_seq, window=self.window,
+                n_models=self.n_models if self.mode != "single" else 0)
+            self._tok = jnp.zeros((self.slots, 1), jnp.int32)
+            self._pos = jnp.zeros((self.slots,), jnp.int32)
+            self._cidx = jnp.zeros((self.slots,), jnp.int32)
+            self._key = jax.random.PRNGKey(self.seed)
+
+    def _admit(self, slot: int) -> None:
+        req = self.scheduler.admit(slot)
+        prompts = jnp.asarray(req.tokens)[None]
+        prefix = (None if req.prefix is None
+                  else jnp.asarray(req.prefix)[None])
+        ci = jnp.zeros((1,), jnp.int32)
+        if self.mode == "route":
+            ci, _ = self._call("router", self._router_prog(),
+                               self.params, prompts, prefix)
+        logits, one = self._call("prefill", self._prefill_prog(),
+                                 self.params, prompts, prefix)
+        self._key, sub = jax.random.split(self._key)
+        tok0, _ = self._call("first_token", self._first_token_prog(),
+                             logits, ci, sub)
+        axis = cache_mod.batch_axis(
+            self.n_models if self.mode != "single" else 0)
+        self._arena = cache_mod.write_slot(self._arena, one,
+                                           jnp.int32(slot), axis=axis)
+        b = jnp.int32(slot)
+        self._tok = self._tok.at[b, 0].set(tok0[0])
+        self._pos = self._pos.at[b].set(self._prefix_P + len(req.tokens))
+        self._cidx = self._cidx.at[b].set(ci[0])
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue with continuous batching: admit into free
+        slots, decode the whole arena for ``chunk`` steps in one
+        dispatch, credit/retire, repeat.  Returns {rid: (n,) tokens}."""
+        self._ensure_arena()
+        sched = self.scheduler
+        while not sched.idle:
+            for b in sched.free_slots():
+                if sched.next_request() is None:
+                    break
+                self._admit(b)
+            active = sched.active_slots()
+            toks, _, self._arena, self._tok, self._pos, self._key = \
+                self._call("decode", self._decode_prog(self.chunk),
+                           self.params, self._tok, self._arena, self._pos,
+                           self._key, self._cidx)
+            toks = np.asarray(toks)
+            for b in active:
+                sched.record(b, toks[b])
+        out, sched.done = dict(sched.done), {}
+        return out
+
+    # -- introspection ----------------------------------------------------
+    def dispatch_counts(self) -> Dict[str, int]:
+        return {n: self.dispatch_log.count(n)
+                for n in sorted(set(self.dispatch_log))}

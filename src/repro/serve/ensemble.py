@@ -1,0 +1,114 @@
+"""Ensemble inference over a trained DML client population.
+
+The paper's deployable artifact is the POPULATION: K mutually-distilled
+clients whose predictions were the only thing that ever crossed client
+boundaries during training.  Two ways to serve them:
+
+  - ``average``: every decode step runs all K clients (vmap over the
+    stacked client axis) and samples from the MEAN of their logits —
+    the serving-time analogue of the Eq.-2 consensus target.
+  - ``route``: pick ONE client per request — the one whose loss profile
+    is nearest the prompt's domain.  Each client optimised the same Eq.-1
+    objective on a shared public set but local data from its own domain,
+    so per-client prompt cross-entropy IS the trained loss profile; the
+    router scores the prompt under all K clients (one vmapped program)
+    and binds the request's slot to the argmin client.
+
+Checkpoint -> serving: ``load_serving_params`` reads any ``Federation``
+``save_state`` file from the LM population (or the slim
+``Federation.export_for_serving`` artifact, or a single-model
+``launch.train --save`` file) back into (config, stacked params, K).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.configs import ARCH_IDS, get_reduced
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+def prompt_ce(params, cfg: ModelConfig, tokens, prefix=None) -> jax.Array:
+    """Per-SEQUENCE next-token CE of a prompt batch (B, S) -> (B,).
+
+    The routing score: teacher-forced prompt cross-entropy under one
+    client (same label alignment as ``tfm.loss_fn``, kept per row
+    instead of batch-averaged so each request routes independently).
+    """
+    logits, _ = tfm.forward(params, cfg, tokens, prefix, remat=False)
+    P = cfg.prefix_tokens if cfg.prefix_tokens else 0
+    if P:
+        pred, labels = logits[:, P - 1: -1], tokens
+    else:
+        pred, labels = logits[:, :-1], tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+    ce = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(ce, axis=-1)
+
+
+def make_router(cfg: ModelConfig):
+    """Vmapped routing program: (stacked params, prompts (B, S)[, prefix])
+    -> (client_idx (B,), ce (K, B)).  One dispatch per admission batch."""
+    def route(stacked_params, prompts, prefix=None):
+        ce = jax.vmap(lambda p: prompt_ce(p, cfg, prompts, prefix))(
+            stacked_params)                                    # (K, B)
+        return jnp.argmin(ce, axis=0).astype(jnp.int32), ce
+    return route
+
+
+def combine_logits(logits: jax.Array, mode: str,
+                   client_idx: Optional[jax.Array] = None) -> jax.Array:
+    """(K, B, V) per-client logits -> (B, V) served logits.
+
+    ``average`` is the vmapped-oracle mean (``jnp.mean`` over the client
+    axis — the bench gate holds the engine's fused path bitwise-equal to
+    this expression); ``route`` selects each slot's bound client."""
+    if mode == "average":
+        return jnp.mean(logits, axis=0)
+    if mode == "route":
+        return logits[client_idx, jnp.arange(logits.shape[1])]
+    raise ValueError(f"unknown ensemble mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint -> serving
+
+def load_serving_params(path: str) -> Tuple[ModelConfig, dict, int]:
+    """Read a training checkpoint into serving shape.
+
+    Accepts (a) ``Federation.save_state`` files from the LM population,
+    (b) the slim ``Federation.export_for_serving`` artifact, and
+    (c) single-model ``launch.train --save`` files.  Returns
+    ``(cfg, params, n_clients)`` — params carry a leading stacked-client
+    axis when ``n_clients`` > 1 (n_clients == 1 may still be stacked;
+    the engine squeezes it for single-model serving).
+
+    Hetero populations checkpoint one pytree PER ARCH — there is no
+    stacked axis to vmap over, so they are rejected here (route-style
+    serving across mixed archs needs one engine per arch).
+    """
+    state, meta = checkpoint.restore(path)
+    engine = meta.get("engine")
+    if engine not in (None, "lm"):
+        raise ValueError(
+            f"checkpoint engine {engine!r} is not servable: the serving "
+            "engine needs same-arch clients stacked on a leading axis "
+            "(the LM population / export_for_serving artifacts)")
+    arch = meta.get("arch")
+    if arch not in ARCH_IDS:
+        raise ValueError(f"checkpoint arch {arch!r} not in {ARCH_IDS}")
+    cfg = get_reduced(arch)
+    if isinstance(state, dict) and "client_params" in state:
+        params = state["client_params"]
+        n_clients = int(meta.get("n_clients", 0) or
+                        jax.tree.leaves(params)[0].shape[0])
+    else:                       # single-model launch.train --save file
+        params, n_clients = state, 1
+        if "embed" not in state:
+            raise ValueError(f"unrecognised checkpoint schema in {path!r}")
+        params = jax.tree.map(lambda t: t[None], params)   # stack of 1
+    return cfg, params, n_clients

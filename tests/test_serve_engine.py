@@ -1,0 +1,325 @@
+"""Serving-engine correctness: fused multi-step decode, continuous
+batching, ensemble modes, sampling, and the checkpoint->serve workflow."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs import get_reduced
+from repro.launch.serve import greedy_generate
+from repro.launch.steps import make_multistep_decode
+from repro.models import transformer as tfm
+from repro.serve import (ServeEngine, SlotScheduler, combine_logits,
+                         load_serving_params, make_router)
+
+ARCHS = ["qwen3-8b", "mamba2-780m", "jamba-1.5-large-398b",
+         "llava-next-mistral-7b"]          # dense / SSM / hybrid-MoE / prefix
+
+
+def _no_drop(cfg):
+    if cfg.moe is None:
+        return cfg
+    m = dataclasses.replace(cfg.moe,
+                            capacity_factor=float(cfg.moe.n_experts) /
+                            cfg.moe.top_k)
+    return cfg.replace(moe=m)
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch):
+    cfg = _no_drop(get_reduced(arch))
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S0 = 2, 5
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (B, S0), 0, cfg.vocab_size), np.int32)
+    prefix = None
+    if cfg.prefix_tokens:
+        prefix = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.prefix_tokens, cfg.prefix_dim)),
+            np.float32)
+    return cfg, params, prompts, prefix
+
+
+@functools.lru_cache(maxsize=None)
+def _stacked(arch="qwen3-4b", K=3):
+    cfg = get_reduced(arch)
+    params = jax.vmap(lambda k: tfm.init_model(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), K))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (2, 5), 0, cfg.vocab_size), np.int32)
+    return cfg, params, prompts
+
+
+# ---------------------------------------------------------------------------
+# fused multi-step decode
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_generate_token_identical_to_legacy_loop(arch):
+    """The single-scan decode must emit the SAME tokens as the legacy
+    per-token Python dispatch loop (greedy), for every cache family."""
+    cfg, params, prompts, prefix = _setup(arch)
+    G = 7
+    legacy = np.asarray(greedy_generate(
+        cfg, params, jnp.asarray(prompts), G,
+        None if prefix is None else jnp.asarray(prefix)))
+    eng = ServeEngine(cfg, params, mode="single", slots=2, max_seq=32)
+    assert np.array_equal(eng.generate(prompts, G, prefix=prefix), legacy)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_logits_match_teacher_forced_forward(arch):
+    """Prefill+decode cache parity: the logits each emission was sampled
+    from must equal the full teacher-forced forward at the same absolute
+    positions (same tolerance the per-step serve tests pin)."""
+    cfg, params, prompts, prefix = _setup(arch)
+    G = 6
+    P = cfg.prefix_tokens or 0
+    eng = ServeEngine(cfg, params, mode="single", slots=2, max_seq=32)
+    toks, lg = eng.generate(prompts, G, prefix=prefix, return_logits=True)
+    seq = jnp.concatenate([jnp.asarray(prompts), jnp.asarray(toks)], axis=1)
+    full, _ = tfm.forward(params, cfg, seq,
+                          None if prefix is None else jnp.asarray(prefix),
+                          remat=False)
+    S0 = prompts.shape[1]
+    # lg[:, t] is the distribution emission t+1 was sampled from == the
+    # forward's output at the position of emission t
+    np.testing.assert_allclose(
+        lg[:, :-1], np.asarray(full[:, P + S0: P + S0 + G - 1]),
+        atol=2e-4, rtol=2e-4)
+
+
+def test_dispatch_count_constant_in_gen_len():
+    cfg, params, prompts, _ = _setup("qwen3-8b")
+    counts = []
+    for G in (3, 11):
+        eng = ServeEngine(cfg, params, mode="single", slots=2, max_seq=32)
+        eng.generate(prompts, G)
+        counts.append(len(eng.dispatch_log))
+    assert counts[0] == counts[1] == 3     # prefill + first_token + decode
+
+
+def test_chunked_decode_chains_bitwise():
+    """Two chained chunks == one long scan, tokens AND logits bitwise
+    (the property the continuous-batching loop relies on)."""
+    cfg, params, prompts, _ = _setup("mamba2-780m")
+    S0, G1, G2 = prompts.shape[1], 3, 4
+    pre = jax.jit(lambda p, t: tfm.prefill(p, cfg, t, max_seq=32))
+    logits, cache = pre(params, jnp.asarray(prompts))
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    key = jax.random.PRNGKey(0)
+    long = jax.jit(make_multistep_decode(cfg, G1 + G2))
+    t_all, l_all, *_ = long(params, tok, cache, jnp.int32(S0), key)
+    short = jax.jit(make_multistep_decode(cfg, G1))
+    t1, l1, c, tok2, pos2, key2 = short(params, tok, cache, jnp.int32(S0),
+                                        key)
+    t2, l2, *_ = jax.jit(make_multistep_decode(cfg, G2))(params, tok2, c,
+                                                         pos2, key2)
+    assert np.array_equal(np.concatenate([t1, t2], 1), np.asarray(t_all))
+    assert np.array_equal(np.concatenate([l1, l2], 1), np.asarray(l_all))
+
+
+def test_per_slot_vector_pos_matches_scalar():
+    """(B,) per-slot positions (the arena path) must be bitwise-equal to
+    the scalar-pos path when all slots share a position."""
+    cfg, params, prompts, _ = _setup("qwen3-8b")
+    S0 = prompts.shape[1]
+    _, cache_a = tfm.prefill(params, cfg, jnp.asarray(prompts), max_seq=32)
+    _, cache_b = tfm.prefill(params, cfg, jnp.asarray(prompts), max_seq=32)
+    tok = jnp.asarray(prompts[:, -1:])
+    la, ca = tfm.decode_step(params, cfg, tok, cache_a, jnp.int32(S0))
+    lb, cb = tfm.decode_step(params, cfg, tok, cache_b,
+                             jnp.full((2,), S0, jnp.int32))
+    assert np.array_equal(np.asarray(la), np.asarray(lb))
+    for a, b in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# sampling
+
+def test_sampling_deterministic_and_top_k_respected():
+    cfg, params, prompts, _ = _setup("qwen3-8b")
+    kw = dict(mode="single", slots=2, max_seq=32, temperature=0.8, top_k=4)
+    a = ServeEngine(cfg, params, seed=7, **kw).generate(prompts, 6)
+    b = ServeEngine(cfg, params, seed=7, **kw).generate(prompts, 6)
+    c = ServeEngine(cfg, params, seed=8, **kw).generate(prompts, 6)
+    assert np.array_equal(a, b) and not np.array_equal(a, c)
+    toks, lg = ServeEngine(cfg, params, seed=7, **kw).generate(
+        prompts, 6, return_logits=True)
+    # every emission after the first must be inside the top-k of the
+    # distribution it was sampled from
+    order = np.argsort(-lg[:, :-1], axis=-1)[..., :4]
+    assert (toks[:, 1:, None] == order).any(-1).all()
+
+
+def test_greedy_is_temperature_zero():
+    cfg, params, prompts, _ = _setup("qwen3-8b")
+    g0 = ServeEngine(cfg, params, mode="single", slots=2, max_seq=32,
+                     temperature=0.0).generate(prompts, 6)
+    legacy = np.asarray(greedy_generate(cfg, params, jnp.asarray(prompts),
+                                        6))
+    assert np.array_equal(g0, legacy)
+
+
+# ---------------------------------------------------------------------------
+# ensemble modes
+
+def test_ensemble_average_bitwise_matches_vmapped_oracle():
+    """The engine's fused scan logits must be BITWISE equal to the
+    standalone jitted vmap-decode + mean oracle at every step."""
+    cfg, params, prompts = _stacked()
+    G, S0 = 5, prompts.shape[1]
+    eng = ServeEngine(cfg, params, mode="average", slots=2, max_seq=32)
+    toks, lg = eng.generate(prompts, G, return_logits=True)
+
+    pre = jax.jit(lambda ps, t: jax.vmap(
+        lambda p: tfm.prefill(p, cfg, t, None, max_seq=32))(ps))
+    step = jax.jit(lambda ps, tok, c, pos: (
+        lambda lo_c: (jnp.mean(lo_c[0], axis=0), lo_c[1]))(
+            jax.vmap(lambda p, cc: tfm.decode_step(p, cfg, tok, cc, pos))(
+                ps, c)))
+    l0, cache = pre(params, jnp.asarray(prompts))
+    tok = jnp.argmax(jnp.mean(l0, 0), -1)[:, None].astype(jnp.int32)
+    for t in range(G):
+        assert np.array_equal(np.asarray(tok[:, 0]), toks[:, t])
+        lo, cache = step(params, tok, cache, jnp.int32(S0 + t))
+        assert np.array_equal(np.asarray(lo), lg[:, t])
+        tok = jnp.argmax(lo, -1)[:, None].astype(jnp.int32)
+
+
+def test_ensemble_route_serves_argmin_ce_client():
+    cfg, params, prompts = _stacked()
+    G = 5
+    rtoks = ServeEngine(cfg, params, mode="route", slots=2,
+                        max_seq=32).generate(prompts, G)
+    cidx, ce = jax.jit(make_router(cfg))(params, jnp.asarray(prompts))
+    assert np.array_equal(np.asarray(cidx), np.argmin(np.asarray(ce), 0))
+    for b, ci in enumerate(np.asarray(cidx)):
+        one = ServeEngine(cfg, jax.tree.map(lambda t: t[ci], params),
+                          mode="single", slots=1, max_seq=32)
+        assert np.array_equal(rtoks[b], one.generate(prompts[b:b + 1], G)[0])
+
+
+def test_combine_logits_modes():
+    lo = jnp.arange(24, dtype=jnp.float32).reshape(3, 2, 4)
+    assert np.array_equal(np.asarray(combine_logits(lo, "average")),
+                          np.asarray(lo).mean(0))
+    picked = combine_logits(lo, "route", jnp.asarray([2, 0]))
+    assert np.array_equal(np.asarray(picked),
+                          np.stack([np.asarray(lo)[2, 0],
+                                    np.asarray(lo)[0, 1]]))
+    with pytest.raises(ValueError):
+        combine_logits(lo, "mean")
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+
+def test_scheduler_budget_and_fifo():
+    s = SlotScheduler(2)
+    r0 = s.submit([1, 2], 3)
+    r1 = s.submit([3], 5)
+    r2 = s.submit([4, 5, 6], 2)
+    assert s.free_slots() == [0, 1] and s.next_request().rid == r0
+    assert s.admit(0).rid == r0 and s.admit(1).rid == r1
+    assert not s.record(0, np.asarray([7, 8]))        # 2/3 emitted
+    assert s.record(0, np.asarray([9, 10, 11]))       # over-budget dropped
+    assert s.done[r0].tolist() == [7, 8, 9]
+    assert s.free_slots() == [0] and s.admit(0).rid == r2
+    assert s.record(0, np.asarray([1, 2, 3])) and not s.idle
+    assert s.record(1, np.asarray([0] * 5)) and s.idle
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-780m"])
+def test_continuous_batching_matches_isolated_generate(arch):
+    """Mid-flight admission/retirement must not perturb neighbours: every
+    request's tokens equal a solo fixed-batch generate of that prompt."""
+    cfg, params, _, _ = _setup(arch)
+    rng = np.random.default_rng(0)
+    eng = ServeEngine(cfg, params, mode="single", slots=2, max_seq=32,
+                      chunk=3)
+    solo = ServeEngine(cfg, params, mode="single", slots=1, max_seq=32)
+    want = {}
+    for i in range(5):                     # 5 requests > 2 slots
+        p = rng.integers(0, cfg.vocab_size, (3 + i % 3,)).astype(np.int32)
+        n = 4 + i % 4
+        want[eng.submit(p, n)] = solo.generate(p[None], n)[0]
+    got = eng.run()
+    assert set(got) == set(want)
+    for rid, w in want.items():
+        assert np.array_equal(got[rid], w), rid
+    assert eng.scheduler.idle
+
+
+def test_continuous_batching_chunk_size_invariant():
+    cfg, params, _ = _stacked()
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, cfg.vocab_size, (2 + i,)).astype(np.int32),
+             3 + i) for i in range(3)]
+    outs = []
+    for chunk in (2, 5):
+        eng = ServeEngine(cfg, params, mode="average", slots=2, max_seq=32,
+                          chunk=chunk)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        done = eng.run()
+        outs.append([done[r] for r in rids])
+    for a, b in zip(*outs):
+        assert np.array_equal(a, b)
+
+
+def test_continuous_decode_reuses_one_program():
+    cfg, params, _, _ = _setup("qwen3-8b")
+    eng = ServeEngine(cfg, params, mode="single", slots=2, max_seq=32,
+                      chunk=2)
+    rng = np.random.default_rng(2)
+    for i in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32),
+                   4)
+    eng.run()
+    # every decode dispatch hits the SAME jitted chunk program
+    assert [k for k in eng._progs if k[0] == "decode"] == [("decode", 2)]
+    assert eng.dispatch_counts()["decode"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint -> serve
+
+def test_export_for_serving_roundtrip(tmp_path):
+    from repro.core.api import Federation
+    from repro.core.populations.lm import LMClients
+    from repro.core.strategies import DML
+    cfg = get_reduced("qwen3-4b")
+    fed = Federation(LMClients(cfg, n_clients=2, rounds=1, batch=2, seq=16,
+                               seed=0), DML())
+    fed.run()
+    full, slim = str(tmp_path / "full.npz"), str(tmp_path / "slim.npz")
+    fed.save_state(full)
+    fed.export_for_serving(slim)
+    c1, p1, n1 = load_serving_params(full)
+    c2, p2, n2 = load_serving_params(slim)
+    assert n1 == n2 == 2 and c1.name == c2.name == cfg.name
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (1, 4),
+                                            0, cfg.vocab_size), np.int32)
+    for mode in ("average", "route", "single"):
+        eng = ServeEngine.from_checkpoint(slim, mode=mode, slots=1,
+                                          max_seq=16)
+        assert eng.generate(prompts, 3).shape == (1, 3)
+        assert eng.n_checkpoint_clients == 2
+
+
+def test_load_serving_params_rejects_unservable(tmp_path):
+    bad = str(tmp_path / "hetero.npz")
+    checkpoint.save(bad, {"x": np.zeros(2)},
+                    {"engine": "hetero", "arch": "qwen3-4b"})
+    with pytest.raises(ValueError, match="not servable"):
+        load_serving_params(bad)
+    weird = str(tmp_path / "weird.npz")
+    checkpoint.save(weird, {"x": np.zeros(2)}, {"arch": "qwen3-4b"})
+    with pytest.raises(ValueError, match="unrecognised"):
+        load_serving_params(weird)
